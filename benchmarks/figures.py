@@ -1,0 +1,113 @@
+"""Paper-figure reproductions (one function per figure/table).
+
+The paper's machines (40-core Skylake, 48-core EPYC) are reproduced via
+the calibrated SimMachine (this container has 1 core — see DESIGN.md §2);
+T0 on THIS host is measured for real by the empty-task benchmark.
+Each function returns a list of CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ADJACENT_DIFFERENCE, EPYC_48, INTEL_SKYLAKE_40C,
+                        SKYLAKE_40, AMD_EPYC_48C, HostParallelExecutor,
+                        artificial_work, t_iter_analytic)
+from repro.core import overhead_law as ol
+from repro.core.calibration import measure_t0_empty_task
+
+SIZES = [2 ** k for k in range(10, 25)]
+T_MEM = t_iter_analytic(ADJACENT_DIFFERENCE, INTEL_SKYLAKE_40C)
+T_CPU = t_iter_analytic(artificial_work(256), INTEL_SKYLAKE_40C)
+T_CPU_AMD = t_iter_analytic(artificial_work(256), AMD_EPYC_48C)
+
+
+def _acc_time(m, t_iter, n):
+    # T0 calibrated by the empty-task benchmark at full region width
+    d = ol.decide(t_iter=t_iter, n_elements=n, t0=m.t0_for(m.cores),
+                  max_cores=m.cores)
+    return m.run_decision(d), d
+
+
+def fig1_chunks_per_core() -> list[str]:
+    """Fig 1: speedup vs size for C in {1,4,8} at 2/16/32 cores
+    (adjacent-difference body)."""
+    rows = []
+    for cores in (2, 16, 32):
+        for c in (1, 4, 8):
+            for n in SIZES[::3]:
+                s = SKYLAKE_40.speedup(t_iter=T_MEM, count=n, n_cores=cores,
+                                       chunks_per_core=c)
+                t = T_MEM * n / s
+                rows.append(f"fig1/cores{cores}/C{c}/n{n},"
+                            f"{t*1e6:.3f},speedup={s:.3f}")
+    return rows
+
+
+def fig2_adjacent_difference() -> list[str]:
+    """Fig 2: static core counts vs acc (memory-bound)."""
+    rows = []
+    for n in SIZES[::2]:
+        best = 0.0
+        for cores in (1, 2, 4, 8, 16, 32, 40):
+            s = SKYLAKE_40.speedup(t_iter=T_MEM, count=n, n_cores=cores,
+                                   chunks_per_core=4)
+            best = max(best, s)
+            rows.append(f"fig2/static{cores}/n{n},"
+                        f"{T_MEM*n/s*1e6:.3f},speedup={s:.3f}")
+        t_acc, d = _acc_time(SKYLAKE_40, T_MEM, n)
+        s_acc = T_MEM * n / t_acc
+        rows.append(f"fig2/acc/n{n},{t_acc*1e6:.3f},"
+                    f"speedup={s_acc:.3f};cores={d.n_cores};"
+                    f"chunk={d.chunk_elems};vs_best={s_acc/max(best,1e-9):.3f}")
+    return rows
+
+
+def _fig34(machine, t_iter, tag) -> list[str]:
+    rows = []
+    for n in SIZES[::2]:
+        best = 0.0
+        for cores in (1, 4, 16, machine.cores):
+            s = machine.speedup(t_iter=t_iter, count=n, n_cores=cores,
+                                chunks_per_core=4)
+            best = max(best, s)
+            rows.append(f"{tag}/static{cores}/n{n},"
+                        f"{t_iter*n/s*1e6:.3f},speedup={s:.3f}")
+        t_acc, d = _acc_time(machine, t_iter, n)
+        s_acc = t_iter * n / t_acc
+        rows.append(f"{tag}/acc/n{n},{t_acc*1e6:.3f},"
+                    f"speedup={s_acc:.3f};cores={d.n_cores};"
+                    f"vs_best={s_acc/max(best,1e-9):.3f}")
+    return rows
+
+
+def fig3_artificial_intel() -> list[str]:
+    """Fig 3: compute-bound, Intel 40c."""
+    return _fig34(SKYLAKE_40, T_CPU, "fig3")
+
+
+def fig4_artificial_amd() -> list[str]:
+    """Fig 4: compute-bound, AMD 48c."""
+    return _fig34(EPYC_48, T_CPU_AMD, "fig4")
+
+
+def table_t0_this_host() -> list[str]:
+    """Measured T0 (empty-task benchmark) on THIS container — the paper's
+    calibration step, executed for real."""
+    ex = HostParallelExecutor(max_workers=2)
+    t0 = measure_t0_empty_task(ex, repeats=16)
+    ex.shutdown()
+    t_opt = ol.t_opt(t0, 0.95)
+    return [f"t0/host,{t0*1e6:.2f},t_opt_us={t_opt*1e6:.2f};t_opt_eq_19t0="
+            f"{abs(t_opt - 19*t0) < 1e-12}"]
+
+
+def table_straggler_mitigation() -> list[str]:
+    """Beyond-paper: C-deep over-decomposition bounds straggler impact."""
+    from repro.runtime import straggler_step_time
+
+    rows = []
+    for c in (1, 2, 4, 8, 16, 32):
+        rel = straggler_step_time(n_devices=256, chunks_per_device=c,
+                                  slowdown=5.0)
+        rows.append(f"straggler/C{c},{rel*1e6:.2f},relative_step={rel:.3f}")
+    return rows

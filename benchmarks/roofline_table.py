@@ -1,0 +1,61 @@
+"""Render the dry-run artifacts (runs/dryrun/*.json) as the §Roofline
+table (markdown) — one row per (arch × shape × mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADER = ("| arch | shape | mesh | accum | compute (ms) | memory (ms) | "
+          "collective (ms) | dominant | useful % | roofline % | HBM GiB | "
+          "next lever |")
+SEP = "|" + "---|" * 12
+
+
+def _lever(rec: dict) -> str:
+    dom = rec.get("dominant", "?")
+    if dom == "collective":
+        return "reduce FSDP gathers / int8 sync / EP a2a"
+    if dom == "memory":
+        return "fused (flash) attention; bf16 master; remat policy"
+    return "causal block skipping; MXU-aligned tiles"
+
+
+def rows(run_dir: str = "runs/dryrun") -> list[str]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(run_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            arch, shape, mesh = rec["cell"].split("__")[:3]
+            out.append(f"| {arch} | {shape} | {mesh} | – | – | – | – | "
+                       f"SKIP | – | – | – | {rec['reason'][:40]} |")
+            continue
+        if rec.get("status") != "ok":
+            arch, shape, mesh = rec["cell"].split("__")[:3]
+            out.append(f"| {arch} | {shape} | {mesh} | – | – | – | – | "
+                       f"ERROR | – | – | – | {rec.get('error','')[:40]} |")
+            continue
+        hbm = (rec.get("argument_bytes", 0)
+               + rec.get("peak_memory_bytes", 0)) / 2 ** 30
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {rec.get('accum')} "
+            f"| {rec['compute_s']*1e3:.2f} | {rec['memory_s']*1e3:.2f} "
+            f"| {rec['collective_s']*1e3:.2f} | {rec['dominant']} "
+            f"| {rec['useful_fraction']*100:.1f} "
+            f"| {rec['roofline_fraction']*100:.2f} | {hbm:.2f} "
+            f"| {_lever(rec)} |")
+    return out
+
+
+def render(run_dir: str = "runs/dryrun") -> str:
+    return "\n".join([HEADER, SEP] + rows(run_dir))
+
+
+def main() -> None:
+    print(render())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Real wall-clock microbenchmarks on this container (1 CPU core):
+kernels (interpret mode) vs jnp oracle, and the algorithm layer's
+dispatch overheads.  These are the honest measured numbers; the
+SimMachine figures carry the multi-core story."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, repeats=5) -> float:
+    fn(*args)  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t)
+    return best
+
+
+def bench_kernels() -> list[str]:
+    from repro import kernels as K
+    from repro.kernels import ref as R
+
+    rows = []
+    x = jnp.asarray(np.random.RandomState(0).randn(65536).astype(np.float32))
+    pairs = [
+        ("adjacent_difference", lambda: K.adjacent_difference(x),
+         lambda: R.adjacent_difference_ref(x)),
+        ("reduce_sum", lambda: K.reduce_sum(x),
+         lambda: R.reduce_sum_ref(x)),
+        ("inclusive_scan", lambda: K.inclusive_scan(x),
+         lambda: R.inclusive_scan_ref(x)),
+    ]
+    for name, kf, rf in pairs:
+        tk = _time(lambda: kf())
+        tr = _time(lambda: rf())
+        rows.append(f"kernel/{name}/interp,{tk*1e6:.1f},ref_us={tr*1e6:.1f}")
+    q = jnp.asarray(np.random.RandomState(1).randn(1, 4, 256, 64)
+                    .astype(np.float32))
+    k_ = jnp.asarray(np.random.RandomState(2).randn(1, 2, 256, 64)
+                     .astype(np.float32))
+    tk = _time(lambda: K.flash_attention(q, k_, k_, block_q=64,
+                                         block_kv=128))
+    tr = _time(lambda: R.attention_ref(q, k_, k_))
+    rows.append(f"kernel/flash_attention/interp,{tk*1e6:.1f},"
+                f"ref_us={tr*1e6:.1f}")
+    return rows
+
+
+def bench_algorithms() -> list[str]:
+    from repro import algorithms as alg
+    from repro.core import (AdaptiveCoreChunk, HostParallelExecutor, par,
+                            seq)
+
+    rows = []
+    host = HostParallelExecutor(max_workers=2)
+    acc = AdaptiveCoreChunk()
+    x = jnp.asarray(np.random.RandomState(0).randn(1 << 20)
+                    .astype(np.float32))
+    for name, fn in [
+        ("adjacent_difference", alg.adjacent_difference),
+        ("inclusive_scan", alg.inclusive_scan),
+    ]:
+        t_seq = _time(lambda f=fn: f(seq, x))
+        pol = par.on(host).with_(acc)
+        t_acc = _time(lambda f=fn: f(pol, x))
+        rows.append(f"alg/{name}/seq,{t_seq*1e6:.1f},n=1M")
+        rows.append(f"alg/{name}/acc,{t_acc*1e6:.1f},"
+                    f"ratio={t_seq/max(t_acc,1e-12):.2f}")
+    host.shutdown()
+    return rows
+
+
+def bench_train_step() -> list[str]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import make_batch
+    from repro.models import init_params
+    from repro.optim import AdamWConfig, adamw
+    from repro.train import make_train_step
+
+    rows = []
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params)
+    batch = make_batch(cfg, 4, 64, kind="train")
+    step = jax.jit(make_train_step(cfg, AdamWConfig(), accum=2))
+
+    def run():
+        p, o, m = step(params, opt, batch)
+        return m["loss"]
+
+    t = _time(run)
+    toks = 4 * 64
+    rows.append(f"train/reduced-qwen3-step,{t*1e6:.1f},"
+                f"tok_per_s={toks/t:.0f}")
+    return rows

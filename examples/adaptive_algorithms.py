@@ -1,0 +1,38 @@
+"""Reproduce the paper's figures as ASCII curves: speedup vs input size
+for static core counts and the acc executor (calibrated machine model of
+the paper's 40-core Skylake; see DESIGN.md §2 for why simulated).
+
+    PYTHONPATH=src python examples/adaptive_algorithms.py
+"""
+from repro.core import (ADJACENT_DIFFERENCE, INTEL_SKYLAKE_40C, SKYLAKE_40,
+                        artificial_work, t_iter_analytic)
+from repro.core import overhead_law as ol
+
+SIZES = [2 ** k for k in range(10, 25, 2)]
+
+
+def curve(t_iter, label, sat=None):
+    print(f"\n=== {label} ===")
+    print(f"{'n':>10} | " + " ".join(f"{c:>7}" for c in (1, 4, 16, 40))
+          + " |     acc (cores, chunk)")
+    for n in SIZES:
+        statics = [SKYLAKE_40.speedup(t_iter=t_iter, count=n, n_cores=c,
+                                      chunks_per_core=4,
+                                      saturation_cores=sat)
+                   for c in (1, 4, 16, 40)]
+        d = ol.decide(t_iter=t_iter, n_elements=n,
+                      t0=SKYLAKE_40.t0_for(40), max_cores=40)
+        s_acc = t_iter * n / SKYLAKE_40.run_decision(d, saturation_cores=sat)
+        marker = "*" if s_acc >= max(statics) * 0.99 else " "
+        print(f"{n:>10} | " + " ".join(f"{s:7.2f}" for s in statics)
+              + f" | {s_acc:7.2f}{marker} (N_C={d.n_cores:2d}, "
+              f"chunk={d.chunk_elems})")
+
+
+curve(t_iter_analytic(ADJACENT_DIFFERENCE, INTEL_SKYLAKE_40C),
+      "adjacent_difference (memory-bound, bw saturates ~10 cores) — Fig. 2",
+      sat=10)
+curve(t_iter_analytic(artificial_work(2048), INTEL_SKYLAKE_40C),
+      "artificial work (compute-bound) — paper Fig. 3")
+print("\n'*' = acc matches/beats the best static configuration (the "
+      "paper's claim).")

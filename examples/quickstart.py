@@ -1,0 +1,49 @@
+"""Quickstart: the adaptive core/chunk executor in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro import algorithms as alg
+from repro.core import (AdaptiveCoreChunk, HostParallelExecutor, par, seq)
+
+# 1. A parallel algorithm with an execution policy — the C++17 API shape.
+x = jnp.asarray(np.random.rand(1_000_000).astype(np.float32))
+d_seq = alg.adjacent_difference(seq, x)
+
+# 2. Bind the adaptive_core_chunk_size (acc) execution-parameters object:
+#    measure_iteration / processing_units_count / get_chunk_size now run
+#    the paper's Overhead-Law model at the first invocation.
+host = HostParallelExecutor()
+acc = AdaptiveCoreChunk(efficiency=0.95, chunks_per_core=8)
+policy = par.on(host).with_(acc)
+d_acc = alg.adjacent_difference(policy, x)
+np.testing.assert_allclose(np.asarray(d_seq), np.asarray(d_acc), rtol=1e-5)
+
+# 3. Inspect the decision the model made for this workload.
+t_iter = acc.measure_iteration(
+    host, lambda s, n: alg.adjacent_difference(seq, x[s:s + n]),
+    x.shape[0], key="demo")
+decision = acc.decide(host, t_iter, x.shape[0])
+print(f"T0 (measured empty-task)   : {decision.t0*1e6:9.2f} us")
+print(f"t_iter (measured)          : {decision.t_iter*1e9:9.3f} ns/elem")
+print(f"N_C  (Eq. 7, clamped)      : {decision.n_cores}")
+print(f"chunk (Eq. 10, T_m floor)  : {decision.chunk_elems} elems "
+      f"({decision.n_chunks} chunks)")
+print(f"predicted speedup          : {decision.predicted_speedup:5.2f}x "
+      f"@ {decision.predicted_efficiency*100:.0f}% efficiency")
+
+# 4. The same model drives the LM stack: microbatching for a train step.
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.executor import MeshExecutor
+from repro.launch.mesh import make_host_mesh
+from repro.train.autotune import choose_plan
+
+cfg = get_config("qwen3-0.6b")
+plan = choose_plan(cfg, ShapeConfig("demo", 4096, 256, "train"),
+                   MeshExecutor(make_host_mesh()))
+print(f"\nLM autotune for {cfg.name} @ train_4k: "
+      f"data_parallel={plan.data_parallel}, accum={plan.accum}, "
+      f"microbatch={plan.microbatch} seqs")

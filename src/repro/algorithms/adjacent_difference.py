@@ -1,0 +1,57 @@
+"""adjacent_difference — the paper's memory-bound benchmark algorithm.
+
+out[0] = x[0];  out[i] = op(x[i], x[i-1])  (op defaults to subtraction).
+
+Chunked execution needs a one-element left halo per chunk; the mesh path
+moves the halo with a ppermute (the TPU analogue of the neighbouring
+cache-line read on CPU).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.executor import MeshExecutor
+from . import detail
+
+
+def adjacent_difference(policy, x: jax.Array,
+                        op: Callable = jnp.subtract) -> jax.Array:
+    count = x.shape[0]
+    if count == 0:
+        return x
+
+    def whole(c):
+        return jnp.concatenate([c[:1], op(c[1:], c[:-1])])
+
+    jf_whole = jax.jit(whole)
+    body = detail.measured_body(jf_whole, x)
+    p = detail.plan(policy, count, body, key=("adjdiff", str(x.dtype)))
+    if not p.parallel:
+        return jf_whole(x)
+
+    if isinstance(p.executor, MeshExecutor):
+        def shard_fn(xl, left, idx):
+            first = jnp.where(idx == 0, xl[:1], op(xl[:1], left))
+            return jnp.concatenate([first, op(xl[1:], xl[:-1])])
+
+        return detail.mesh_map_with_left_halo(p.executor, p.cores, shard_fn, x)
+
+    # Host path: interior chunks read one halo element to their left.
+    def interior(c_with_halo):
+        return op(c_with_halo[1:], c_with_halo[:-1])
+
+    jf_interior = jax.jit(interior)
+
+    def thunk(c):
+        if c.start == 0:
+            out = jf_whole(x[:c.size])
+        else:
+            out = jf_interior(x[c.start - 1:c.start + c.size])
+        jax.block_until_ready(out)
+        return out
+
+    outs = p.executor.bulk_sync_execute(thunk, p.chunks)
+    return jnp.concatenate(outs, axis=0)

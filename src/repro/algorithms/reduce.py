@@ -1,0 +1,122 @@
+"""Map-reduce-type algorithms (paper Section 1): reduce, transform_reduce,
+count_if, all_of / any_of / none_of, min_element / max_element."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.executor import MeshExecutor
+from . import detail
+
+
+def _plan_for(policy, x, jf_partial, tag):
+    body = detail.measured_body(jf_partial, x)
+    return detail.plan(policy, x.shape[0], body, key=(tag, str(x.dtype)))
+
+
+def reduce(policy, x: jax.Array, op: Callable = jnp.add, init=None):
+    """Generic associative reduction.  ``op`` is a binary jnp callable;
+    common cases (add/min/max) hit fused partials."""
+    identity = _identity_for(op, x.dtype, init)
+
+    def partial(c):
+        return jax.lax.reduce(c, identity.astype(c.dtype), op, (0,))
+
+    jf = jax.jit(partial)
+    p = _plan_for(policy, x, jf, "reduce")
+    if isinstance(p.executor, MeshExecutor) and p.parallel:
+        parts = detail.mesh_reduce(p.executor, p.cores, x, jf,
+                                   identity.astype(x.dtype))
+        return jax.lax.reduce(parts, identity.astype(x.dtype), op, (0,))
+    out = detail.run_reduce_chunks(p, jf, op, x)
+    if init is not None and op in (jnp.add,):
+        out = op(out, init)
+    return out
+
+
+def _identity_for(op, dtype, init):
+    if op is jnp.add:
+        return jnp.zeros((), dtype)
+    if op is jnp.multiply:
+        return jnp.ones((), dtype)
+    if op is jnp.minimum:
+        return jnp.array(jnp.inf if jnp.issubdtype(dtype, jnp.floating)
+                         else jnp.iinfo(dtype).max, dtype)
+    if op is jnp.maximum:
+        return jnp.array(-jnp.inf if jnp.issubdtype(dtype, jnp.floating)
+                         else jnp.iinfo(dtype).min, dtype)
+    if op in (jnp.logical_and,):
+        return jnp.array(True)
+    if op in (jnp.logical_or,):
+        return jnp.array(False)
+    if init is not None:
+        return jnp.asarray(init, dtype)
+    raise ValueError(f"no identity known for {op}; pass init=")
+
+
+def transform_reduce(policy, x: jax.Array, transform_fn: Callable,
+                     op: Callable = jnp.add, init=None):
+    identity = _identity_for(op, x.dtype, init)
+
+    def partial(c):
+        t = transform_fn(c)
+        return jax.lax.reduce(t, identity.astype(t.dtype), op, (0,))
+
+    jf = jax.jit(partial)
+    p = _plan_for(policy, x, jf, ("transform_reduce", id(transform_fn)))
+    if isinstance(p.executor, MeshExecutor) and p.parallel:
+        parts = detail.mesh_reduce(p.executor, p.cores, x, jf, identity)
+        return jax.lax.reduce(parts, identity.astype(parts.dtype), op, (0,))
+    return detail.run_reduce_chunks(p, jf, op, x)
+
+
+def count_if(policy, x: jax.Array, pred: Callable):
+    return transform_reduce(
+        policy, x, lambda c: pred(c).astype(jnp.int32), jnp.add)
+
+
+def all_of(policy, x: jax.Array, pred: Callable):
+    return transform_reduce(policy, x, pred, jnp.logical_and)
+
+
+def any_of(policy, x: jax.Array, pred: Callable):
+    return transform_reduce(policy, x, pred, jnp.logical_or)
+
+
+def none_of(policy, x: jax.Array, pred: Callable):
+    return jnp.logical_not(any_of(policy, x, pred))
+
+
+def _arg_extreme(policy, x: jax.Array, is_min: bool):
+    """(value, index) of the extreme element, chunk-parallel."""
+    def partial(c):
+        i = jnp.argmin(c) if is_min else jnp.argmax(c)
+        return c[i], i
+
+    jf = jax.jit(partial)
+    body = detail.measured_body(jf, x)
+    p = detail.plan(policy, x.shape[0], body,
+                    key=("min" if is_min else "max", str(x.dtype)))
+    if not p.parallel:
+        return jf(x)
+
+    def thunk(c):
+        v, i = jf(x[c.start:c.start + c.size])
+        jax.block_until_ready(v)
+        return v, i + c.start
+
+    partials = p.executor.bulk_sync_execute(thunk, p.chunks)
+    vals = jnp.stack([v for v, _ in partials])
+    idxs = jnp.stack([i for _, i in partials])
+    sel = jnp.argmin(vals) if is_min else jnp.argmax(vals)
+    return vals[sel], idxs[sel]
+
+
+def min_element(policy, x: jax.Array):
+    return _arg_extreme(policy, x, True)
+
+
+def max_element(policy, x: jax.Array):
+    return _arg_extreme(policy, x, False)

@@ -1,0 +1,80 @@
+"""Prefix sums (paper: "map-reduce-type ... prefix sums").
+
+Chunk-parallel three-phase scan:
+  1. scan each chunk locally           (parallel),
+  2. exclusive-scan the chunk totals   (serial, n_chunks elements),
+  3. combine each chunk with its offset (parallel).
+
+The mesh path does the same with shard-local scans and an all-gather of
+shard totals (detail.mesh_scan).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.executor import MeshExecutor
+from . import detail
+
+
+def _assoc_scan(op, c):
+    return jax.lax.associative_scan(op, c)
+
+
+def inclusive_scan(policy, x: jax.Array, op: Callable = jnp.add) -> jax.Array:
+    local = jax.jit(lambda c: _assoc_scan(op, c))
+    total = jax.jit(lambda c: _assoc_scan(op, c)[-1])
+    combine = jax.jit(lambda c, off: op(off, c))
+
+    body = detail.measured_body(local, x)
+    p = detail.plan(policy, x.shape[0], body, key=("iscan", str(x.dtype)))
+    if not p.parallel:
+        return local(x)
+
+    if isinstance(p.executor, MeshExecutor):
+        identity = _scan_identity(op, x.dtype)
+        return detail.mesh_scan(
+            p.executor, p.cores, x,
+            local_scan=lambda c: _assoc_scan(op, c),
+            local_total=lambda c: jax.lax.reduce(
+                c, identity.astype(c.dtype), op, (0,)),
+            apply_offset=lambda s, off: op(off, s),
+            identity=identity)
+
+    # Phase 1: local scans (parallel)
+    def thunk(c):
+        out = local(x[c.start:c.start + c.size])
+        jax.block_until_ready(out)
+        return out
+
+    scanned = p.executor.bulk_sync_execute(thunk, p.chunks)
+    # Phase 2: serial exclusive scan of totals
+    offsets = []
+    carry = None
+    for s in scanned:
+        offsets.append(carry)
+        carry = s[-1] if carry is None else op(carry, s[-1])
+    # Phase 3: apply offsets (parallel)
+    def apply(args):
+        i, off = args
+        return scanned[i] if off is None else combine(scanned[i], off)
+
+    outs = p.executor.bulk_sync_execute(
+        apply, list(enumerate(offsets)))
+    return jnp.concatenate(outs, axis=0)
+
+
+def exclusive_scan(policy, x: jax.Array, init, op: Callable = jnp.add) -> jax.Array:
+    """out[0] = init; out[i] = op(out[i-1], x[i-1])."""
+    inc = inclusive_scan(policy, x, op)
+    shifted = jnp.concatenate(
+        [jnp.asarray([init], dtype=x.dtype), op(jnp.asarray(init, x.dtype), inc[:-1])])
+    return shifted
+
+
+def _scan_identity(op, dtype):
+    from .reduce import _identity_for
+
+    return _identity_for(op, dtype, None)

@@ -1,0 +1,3 @@
+from .roofline import RooflineReport, analyze, collective_bytes, model_flops
+
+__all__ = ["analyze", "collective_bytes", "model_flops", "RooflineReport"]

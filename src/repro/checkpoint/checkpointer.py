@@ -1,0 +1,122 @@
+"""Sharded checkpointing: atomic publish, async save, elastic restore.
+
+Layout:  <dir>/step_<n>/arrays.npz  +  <dir>/step_<n>/DONE
+Writes go to a temp dir first and are renamed into place; a checkpoint
+without DONE is ignored by ``latest`` (crash-safe).  ``AsyncCheckpointer``
+runs saves on a background thread (training continues; ``wait()`` before
+exit).  Restore maps arrays back onto any pytree structure ("like"), so a
+restart may use a different mesh — resharding is a ``device_put`` with
+the new shardings (runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(tree))
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step}, f)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest(ckpt_dir: str) -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    done = [d for d in sorted(os.listdir(ckpt_dir))
+            if d.startswith("step_")
+            and os.path.exists(os.path.join(ckpt_dir, d, "DONE"))]
+    return os.path.join(ckpt_dir, done[-1]) if done else None
+
+
+def restore(path: str, like: Any, *, shardings: Any = None) -> tuple[Any, int]:
+    """Restore arrays onto the structure of ``like``.  ``shardings`` (same
+    structure or a single sharding) triggers device_put — the elastic-
+    restart path."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = dict(z.items())
+    with open(os.path.join(path, "meta.json")) as f:
+        step = json.load(f)["step"]
+
+    paths, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = arrays[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(tdef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, step
+
+
+class AsyncCheckpointer:
+    """Background-thread saver: one in-flight save, newest-wins queue."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._err: BaseException | None = None
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        # Snapshot to host first (cheap; arrays are already on host for CPU
+        # and become a device->host copy on TPU) so training can mutate.
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, keep=self.keep)
+            except BaseException as e:  # noqa: BLE001 - surfaced in wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err

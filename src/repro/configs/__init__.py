@@ -1,0 +1,32 @@
+"""Config registry: one module per assigned architecture."""
+from . import base
+from .base import (DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+                   ArchConfig, ShapeConfig, shape_applicable)
+
+_ARCH_MODULES = {
+    "grok-1-314b": "grok_1_314b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "xlstm-350m": "xlstm_350m",
+    "granite-34b": "granite_34b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    import importlib
+
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f".{_ARCH_MODULES[name]}", __package__)
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

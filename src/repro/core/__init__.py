@@ -1,0 +1,37 @@
+"""Core: the paper's adaptive core/chunk execution model for JAX.
+
+Public surface:
+  - overhead_law: Eqs 1-10 as pure functions + AccDecision
+  - AdaptiveCoreChunk (acc), StaticCoreChunk: execution-parameters objects
+  - customization points: measure_iteration, processing_units_count,
+    get_chunk_size (tag_invoke-style dispatch)
+  - policies: seq, par, unseq, par_unseq
+  - executors: SequentialExecutor, HostParallelExecutor, MeshExecutor
+  - hardware specs + analytic cost model + SimMachine
+"""
+from . import calibration, cost_model, customization, overhead_law
+from .acc import AdaptiveCoreChunk, StaticCoreChunk
+from .cost_model import (ADJACENT_DIFFERENCE, WorkloadProfile,
+                         artificial_work, t0_analytic, t_iter_analytic)
+from .customization import (get_chunk_size, measure_iteration,
+                            processing_units_count)
+from .executor import (Chunk, Executor, HostParallelExecutor, MeshExecutor,
+                       SequentialExecutor, make_chunks)
+from .hardware import (AMD_EPYC_48C, INTEL_SKYLAKE_40C, TPU_V5E,
+                       HardwareSpec, this_host)
+from .overhead_law import AccDecision, decide
+from .policy import ExecutionPolicy, par, par_unseq, seq, unseq
+from .simmachine import EPYC_48, SKYLAKE_40, SimMachine
+
+__all__ = [
+    "overhead_law", "customization", "calibration", "cost_model",
+    "AdaptiveCoreChunk", "StaticCoreChunk", "AccDecision", "decide",
+    "measure_iteration", "processing_units_count", "get_chunk_size",
+    "ExecutionPolicy", "seq", "par", "unseq", "par_unseq",
+    "Chunk", "Executor", "SequentialExecutor", "HostParallelExecutor",
+    "MeshExecutor", "make_chunks",
+    "HardwareSpec", "TPU_V5E", "INTEL_SKYLAKE_40C", "AMD_EPYC_48C",
+    "this_host", "WorkloadProfile", "ADJACENT_DIFFERENCE",
+    "artificial_work", "t_iter_analytic", "t0_analytic",
+    "SimMachine", "SKYLAKE_40", "EPYC_48",
+]

@@ -1,0 +1,131 @@
+"""``adaptive_core_chunk_size`` (acc) — the paper's contribution.
+
+An execution-parameters object that overloads the three customization
+points (it simply defines methods with the tag names; see
+core/customization.py for the dispatch rule):
+
+* ``measure_iteration``       — wall-clock a sample chunk (host) or evaluate
+  the analytic roofline (mesh / WorkloadProfile), cached per workload key;
+* ``processing_units_count``  — Eq. 7, clamped to the executor's units;
+* ``get_chunk_size``          — Eq. 10 with the T_m floor.
+
+``decide`` exposes the full decision record for the training loop, the
+serving engine, and the Pallas tuner, which need more than the three
+scalar answers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Hashable
+
+from . import calibration, overhead_law
+from .cost_model import WorkloadProfile, t0_analytic, t_iter_analytic
+from .executor import Executor, MeshExecutor
+from .hardware import TPU_V5E, HardwareSpec
+
+
+@dataclasses.dataclass
+class AdaptiveCoreChunk:
+    """Execution-parameters object implementing the paper's acc policy."""
+
+    efficiency: float = overhead_law.DEFAULT_EFFICIENCY
+    chunks_per_core: int = overhead_law.DEFAULT_CHUNKS_PER_CORE
+    hardware: HardwareSpec = TPU_V5E      # used for analytic backends
+    t0_override: float | None = None      # tests / reproducibility
+    cache: calibration.CalibrationCache = dataclasses.field(
+        default_factory=calibration.CalibrationCache)
+
+    # -- T0 ---------------------------------------------------------------
+    def calibrate_t0(self, executor: Executor) -> float:
+        if self.t0_override is not None:
+            return self.t0_override
+        if isinstance(executor, MeshExecutor):
+            return t0_analytic(self.hardware, executor.num_units())
+        key = ("t0", id(executor))
+        return self.cache.t0(
+            key, lambda: calibration.measure_t0_empty_task(executor))
+
+    # -- customization point: measure_iteration ----------------------------
+    def measure_iteration(self, executor: Executor, body: Any,
+                          count: int, key: Hashable | None = None) -> float:
+        """Seconds per element for ``body``.
+
+        ``body`` is either a ``WorkloadProfile`` (analytic path) or a
+        callable ``body(start, size)`` chunk thunk (measured path).
+        Measured once per workload key, then cached (paper Section 4.2).
+        """
+        if isinstance(body, WorkloadProfile):
+            return t_iter_analytic(body, self.hardware)
+        k = key if key is not None else ("t_iter", getattr(body, "__name__", id(body)))
+        return self.cache.t_iter(
+            k, lambda: calibration.measure_iteration_wallclock(body, count))
+
+    # -- customization point: processing_units_count ------------------------
+    def processing_units_count(self, executor: Executor, t_iter: float,
+                               count: int) -> int:
+        d = self.decide(executor, t_iter, count)
+        return d.n_cores
+
+    # -- customization point: get_chunk_size --------------------------------
+    def get_chunk_size(self, executor: Executor, t_iter: float,
+                       cores: int, count: int) -> int:
+        if cores <= 1:
+            return count
+        t0 = self.calibrate_t0(executor)
+        chunk = overhead_law.chunk_size(count, cores, self.chunks_per_core)
+        if t_iter > 0:
+            t_m = overhead_law.t_opt(t0, self.efficiency) / self.chunks_per_core
+            chunk = max(chunk, min(math.ceil(t_m / t_iter), count))
+        return chunk
+
+    # -- full decision -------------------------------------------------------
+    def decide(self, executor: Executor, t_iter: float,
+               count: int) -> overhead_law.AccDecision:
+        t0 = self.calibrate_t0(executor)
+        max_cores = max(executor.num_units(), 1)
+        d = overhead_law.decide(
+            t_iter=t_iter, n_elements=count, t0=t0, max_cores=max_cores,
+            eff=self.efficiency, chunks_per_core=self.chunks_per_core)
+        if isinstance(executor, MeshExecutor) and d.n_cores > 1:
+            # Mesh shardings need a divisor of the data extent.
+            cores = executor.submesh_size(d.n_cores)
+            if cores != d.n_cores:
+                chunk = overhead_law.chunk_size(count, cores, self.chunks_per_core)
+                d = dataclasses.replace(
+                    d, n_cores=cores, chunk_elems=chunk,
+                    n_chunks=math.ceil(count / chunk),
+                    predicted_time=overhead_law.predicted_time(d.t1, cores, t0),
+                    predicted_speedup=overhead_law.speedup(d.t1, cores, t0),
+                    predicted_efficiency=overhead_law.efficiency(d.t1, cores, t0),
+                )
+        return d
+
+    def decide_for_profile(self, executor: Executor, profile: WorkloadProfile,
+                           count: int) -> overhead_law.AccDecision:
+        return self.decide(
+            executor, t_iter_analytic(profile, self.hardware), count)
+
+
+@dataclasses.dataclass
+class StaticCoreChunk:
+    """The baseline: fixed core count and chunks-per-core (OpenMP-static /
+    HPX-default semantics).  Used by benchmarks as the non-adaptive
+    comparison lines in the paper's figures."""
+
+    cores: int
+    chunks_per_core: int = 1
+
+    def measure_iteration(self, executor, body, count, key=None) -> float:
+        return 0.0  # static: no measurement needed
+
+    def processing_units_count(self, executor, t_iter: float, count: int) -> int:
+        return min(self.cores, max(executor.num_units(), 1))
+
+    def get_chunk_size(self, executor, t_iter: float, cores: int,
+                       count: int) -> int:
+        return max(math.ceil(count / max(cores * self.chunks_per_core, 1)), 1)
+
+
+# Convenience instance mirroring the paper's default configuration.
+acc = AdaptiveCoreChunk

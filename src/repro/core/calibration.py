@@ -1,0 +1,81 @@
+"""Runtime calibration of T0 and per-iteration time (paper Section 5).
+
+The paper: "The time (T_i) will be calculated once for each workload, and
+then will be used to find T1 ... HPX runs a benchmark on an empty thread to
+calculate overhead which is T0."
+
+Host backend: both are wall-clock measured here, once, and cached.
+Mesh backend: wall-clock is meaningless on the dry-run container, so the
+analytic path (core/cost_model.py) derives the same quantities from
+compiled FLOPs/bytes and the hardware constants.  Both paths produce plain
+floats consumed by the same Overhead-Law solver.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Hashable
+
+from .executor import Chunk, Executor, make_chunks
+
+
+class CalibrationCache:
+    """Per-workload memo: first invocation measures, later ones reuse."""
+
+    def __init__(self):
+        self._t_iter: dict[Hashable, float] = {}
+        self._t0: dict[Hashable, float] = {}
+
+    def t_iter(self, key: Hashable, measure: Callable[[], float]) -> float:
+        if key not in self._t_iter:
+            self._t_iter[key] = measure()
+        return self._t_iter[key]
+
+    def t0(self, key: Hashable, measure: Callable[[], float]) -> float:
+        if key not in self._t0:
+            self._t0[key] = measure()
+        return self._t0[key]
+
+    def clear(self) -> None:
+        self._t_iter.clear()
+        self._t0.clear()
+
+
+GLOBAL_CACHE = CalibrationCache()
+
+
+def measure_t0_empty_task(executor: Executor, repeats: int = 32) -> float:
+    """Time dispatching an empty task through the executor ("empty thread"
+    benchmark).  Returns seconds per parallel-region invocation."""
+
+    def empty(_: Chunk) -> None:
+        return None
+
+    chunks = make_chunks(max(executor.num_units(), 2), 1)
+    # Warm the pool (thread creation is a one-time cost, not T0).
+    executor.bulk_sync_execute(empty, chunks)
+    start = time.perf_counter()
+    for _ in range(repeats):
+        executor.bulk_sync_execute(empty, chunks)
+    return (time.perf_counter() - start) / repeats
+
+
+def measure_iteration_wallclock(
+    body: Callable[[int, int], Any],
+    count: int,
+    sample: int | None = None,
+    repeats: int = 3,
+) -> float:
+    """Seconds per element of ``body(start, size)`` (jit'd chunk thunk).
+
+    Runs the body on a sample prefix (default: min(count, 64k)), takes the
+    best of ``repeats`` to strip scheduler noise, divides by the sample
+    size.  ``body`` must synchronise internally (block_until_ready).
+    """
+    n = min(count, sample or 65536)
+    body(0, n)  # compile / warm caches
+    best = float("inf")
+    for _ in range(repeats):
+        t = time.perf_counter()
+        body(0, n)
+        best = min(best, time.perf_counter() - t)
+    return best / n

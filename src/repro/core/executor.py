@@ -1,0 +1,136 @@
+"""Executors: where chunks actually run.
+
+Three backends share one protocol:
+
+* ``SequentialExecutor``  — in-order, no parallel overhead (``seq`` policy).
+* ``HostParallelExecutor``— a thread pool over jit-compiled chunk thunks.
+  XLA releases the GIL during computation, so on a multi-core host this is
+  genuine parallelism; it is the faithful analogue of HPX's thread pool and
+  the backend used for the paper-figure wall-clock benchmarks.
+* ``MeshExecutor``        — a JAX device mesh.  It does not run Python
+  thunks per chunk; instead it carries the mesh and exposes the unit count
+  and sub-mesh selection used by the shard_map-based algorithm backend and
+  the training/serving loops.
+
+Executors may overload customization points simply by defining methods of
+the same name (see core/customization.py); none of these defaults do, so
+all adaptivity lives in the execution-parameters objects (core/acc.py).
+"""
+from __future__ import annotations
+
+import concurrent.futures as _cf
+import dataclasses
+from typing import Any, Callable, Protocol, Sequence, runtime_checkable
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """Half-open element range [start, start + size) assigned to one task."""
+
+    start: int
+    size: int
+
+
+def make_chunks(count: int, chunk_elems: int) -> list[Chunk]:
+    """Split ``count`` elements into tasks of ``chunk_elems`` (last partial)."""
+    if count <= 0:
+        return []
+    chunk_elems = max(int(chunk_elems), 1)
+    return [
+        Chunk(start, min(chunk_elems, count - start))
+        for start in range(0, count, chunk_elems)
+    ]
+
+
+@runtime_checkable
+class Executor(Protocol):
+    def num_units(self) -> int: ...
+
+    def bulk_sync_execute(
+        self, fn: Callable[[Chunk], Any], chunks: Sequence[Chunk]
+    ) -> list[Any]: ...
+
+
+class SequentialExecutor:
+    """Runs every chunk in order on the calling thread."""
+
+    def num_units(self) -> int:
+        return 1
+
+    def bulk_sync_execute(self, fn, chunks):
+        return [fn(c) for c in chunks]
+
+
+class HostParallelExecutor:
+    """Thread pool over chunk thunks (HPX thread-pool analogue).
+
+    ``max_workers`` bounds the pool; the *effective* unit count for a given
+    workload is decided by the execution-parameters object (e.g. acc) and
+    passed per-call via ``bulk_sync_execute``'s implicit chunk count — the
+    pool never runs more chunks concurrently than it has workers.
+    """
+
+    def __init__(self, max_workers: int | None = None):
+        import os
+
+        self._max_workers = max_workers or (os.cpu_count() or 1)
+        self._pool: _cf.ThreadPoolExecutor | None = None
+
+    def num_units(self) -> int:
+        return self._max_workers
+
+    def _ensure_pool(self) -> _cf.ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = _cf.ThreadPoolExecutor(max_workers=self._max_workers)
+        return self._pool
+
+    def bulk_sync_execute(self, fn, chunks):
+        if len(chunks) <= 1:
+            return [fn(c) for c in chunks]
+        pool = self._ensure_pool()
+        return list(pool.map(fn, chunks))
+
+    def shutdown(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __del__(self):  # pragma: no cover - best-effort cleanup
+        try:
+            self.shutdown()
+        except Exception:
+            pass
+
+
+class MeshExecutor:
+    """Executor view of a JAX device mesh.
+
+    ``data_axes`` are the axes over which a data-parallel workload may be
+    spread; ``num_units`` is their total extent.  ``submesh_size(n)`` maps
+    an acc core-count decision onto a realisable device count (a divisor of
+    the full extent, so shardings stay regular).
+    """
+
+    def __init__(self, mesh, data_axes: tuple[str, ...] = ("data",)):
+        self.mesh = mesh
+        self.data_axes = tuple(a for a in data_axes if a in mesh.shape)
+        n = 1
+        for a in self.data_axes:
+            n *= mesh.shape[a]
+        self._units = n
+
+    def num_units(self) -> int:
+        return self._units
+
+    def submesh_size(self, n_cores: int) -> int:
+        """Largest divisor of the data extent that is <= n_cores (>= 1)."""
+        n_cores = max(min(int(n_cores), self._units), 1)
+        for d in range(n_cores, 0, -1):
+            if self._units % d == 0:
+                return d
+        return 1
+
+    def bulk_sync_execute(self, fn, chunks):
+        # Mesh execution happens inside jit/shard_map; running Python thunks
+        # per chunk would defeat SPMD.  Sequential fallback for generic use.
+        return [fn(c) for c in chunks]

@@ -1,0 +1,48 @@
+"""Execution policies mirroring hpx::execution / std::execution.
+
+``seq``/``par``/``unseq``/``par_unseq`` singletons; ``.on(executor)`` binds
+an executor, ``.with_(params)`` binds an execution-parameters object (the
+acc object, a static-chunk object, ...).  Algorithms receive a policy as
+their first argument, exactly like the C++ parallel algorithms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    kind: str                      # "seq" | "par" | "unseq" | "par_unseq"
+    executor: Any = None
+    params: Any = None
+
+    def on(self, executor: Any) -> "ExecutionPolicy":
+        return dataclasses.replace(self, executor=executor)
+
+    def with_(self, params: Any) -> "ExecutionPolicy":
+        return dataclasses.replace(self, params=params)
+
+    @property
+    def allows_parallel(self) -> bool:
+        return self.kind in ("par", "par_unseq")
+
+    @property
+    def allows_vectorization(self) -> bool:
+        return self.kind in ("unseq", "par_unseq")
+
+    def resolve_executor(self):
+        """Executor to use: bound one, else a policy-appropriate default."""
+        if self.executor is not None:
+            return self.executor
+        from .executor import HostParallelExecutor, SequentialExecutor
+
+        if self.allows_parallel:
+            return HostParallelExecutor()
+        return SequentialExecutor()
+
+
+seq = ExecutionPolicy("seq")
+par = ExecutionPolicy("par")
+unseq = ExecutionPolicy("unseq")
+par_unseq = ExecutionPolicy("par_unseq")

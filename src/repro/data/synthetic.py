@@ -1,0 +1,92 @@
+"""Synthetic data: batch generation for smoke/e2e runs, and
+ShapeDtypeStruct specs for the dry-run (no allocation).
+
+The frontend stubs live here per the assignment: [vlm]/[audio] archs get
+precomputed patch/frame embeddings as inputs ("frontend_feats")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+
+def batch_shapes(cfg: ArchConfig, batch: int, seq: int,
+                 kind: str = "train") -> dict:
+    """Logical shapes/dtypes of one batch (used by input_specs and the
+    generator)."""
+    shapes = {"tokens": ((batch, seq), jnp.int32)}
+    if kind == "train":
+        shapes["labels"] = ((batch, seq), jnp.int32)
+    if cfg.frontend == "vision":
+        shapes["frontend_feats"] = (
+            (batch, cfg.num_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return shapes
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                kind_override: str | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    kind = kind_override or shape.kind
+    if kind == "decode":
+        # one new token against a seq_len-deep cache
+        shapes = batch_shapes(cfg, shape.global_batch, 1, "decode")
+    elif kind == "prefill":
+        shapes = batch_shapes(cfg, shape.global_batch, shape.seq_len,
+                              "prefill")
+    else:
+        shapes = batch_shapes(cfg, shape.global_batch, shape.seq_len,
+                              "train")
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, *,
+               kind: str = "train", seed: int = 0) -> dict:
+    rs = np.random.RandomState(seed)
+    out = {"tokens": jnp.asarray(
+        rs.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+    if kind == "train":
+        out["labels"] = jnp.asarray(
+            rs.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    if cfg.frontend == "vision":
+        out["frontend_feats"] = jnp.asarray(
+            rs.randn(batch, cfg.num_frontend_tokens, cfg.d_model) * 0.02,
+            jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+class TokenPipeline:
+    """Host-side synthetic token stream with simple double-buffer prefetch
+    (stands in for a real corpus loader; the interface is what matters:
+    ``__iter__`` yields device-ready global batches)."""
+
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int, *,
+                 seed: int = 0, prefetch: int = 2):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.seed = seed
+        self.prefetch = prefetch
+
+    def __iter__(self):
+        import queue
+        import threading
+
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def produce():
+            step = 0
+            while not stop.is_set():
+                b = make_batch(self.cfg, self.batch, self.seq,
+                               kind="train", seed=self.seed + step)
+                q.put(b)
+                step += 1
+
+        t = threading.Thread(target=produce, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots, with
+adaptive (acc-model) block tiling.  Validated in interpret mode on CPU
+against the pure-jnp oracles in ref.py."""
+from . import ops, ref, tuning
+from .ops import (adjacent_difference, artificial_work, flash_attention,
+                  inclusive_scan, reduce_sum, rmsnorm)
+
+__all__ = [
+    "ops", "ref", "tuning",
+    "adjacent_difference", "artificial_work", "flash_attention",
+    "inclusive_scan", "reduce_sum", "rmsnorm",
+]

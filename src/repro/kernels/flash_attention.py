@@ -1,0 +1,144 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Online-softmax tiling: grid (batch*q_heads, q_blocks, kv_blocks) with the
+kv dimension innermost; running max/denominator/accumulator live in VMEM
+scratch across kv steps.  Supports causal masking, sliding windows (SWA)
+and grouped KV heads (GQA) — the kv-head block index is derived from the
+q-head grid index, so no HBM repeat of K/V is ever materialised.
+
+The (block_q, block_kv) tile comes from tuning.plan_attention — the
+paper's chunk-size model applied to the VMEM budget: blocks as large as
+double-buffering allows (T_m floor), grid deep enough to keep the
+DMA/compute pipeline full (C chunks per core).
+
+Fully-masked tiles (above the causal diagonal / outside the window) skip
+their compute via pl.when — on real hardware this removes ~half the work
+for causal prefill, the structural analogue of the paper's "don't schedule
+empty chunks".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+_STAT_LANES = 128  # TPU scratch wants a 128-lane trailing dim
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int | None,
+            block_q: int, block_kv: int, sq: int, skv: int, kv_len: int,
+            nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Query positions are aligned to the *end* of the kv axis so the same
+    # kernel serves training (sq == skv) and chunked prefill (sq < skv).
+    q_off = iq * block_q + (kv_len - sq)
+    k_off = ik * block_kv
+
+    # Tile visibility: skip tiles that the causal diagonal or the window
+    # excludes entirely (plus tiles fully in kv padding).
+    visible = k_off < kv_len
+    if causal:
+        visible &= q_off + block_q - 1 >= k_off
+    if window is not None:
+        visible &= q_off - (k_off + block_kv - 1) < window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+        qi = q_off + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kj = k_off + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = kj < kv_len
+        if causal:
+            mask &= qi >= kj
+        if window is not None:
+            mask &= (qi - kj) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # Rows with no visible key yet keep m == -inf; exp of (-inf - -inf)
+        # is NaN — neutralise via the mask / alpha guards below.
+        p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+        l_cur = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = jnp.broadcast_to(m_cur[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_cur[:, None], l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    scale: float | None = None, kv_len: int | None = None,
+    sq_true: int | None = None,
+    block_q: int = 128, block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D), Hq % Hkv == 0.
+
+    Sq/Skv must be multiples of the block sizes.  ops.py pads and passes
+    ``kv_len`` = true kv length (padding keys masked) and ``sq_true`` =
+    true q length, so real q rows keep end-aligned positions
+    (row r ↦ global position r + kv_len - sq_true)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kv_len = kv_len if kv_len is not None else skv
+    sq_true = sq_true if sq_true is not None else sq
+    nq, nk = sq // block_q, skv // block_kv
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, sq=sq_true, skv=skv,
+        kv_len=kv_len, nk=nk)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda g, i, j: (g // hq, g % hq, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda g, i, j: (g // hq, (g % hq) // group, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda g, i, j: (g // hq, (g % hq) // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda g, i, j: (g // hq, g % hq, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((block_q, _STAT_LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

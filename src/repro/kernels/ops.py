@@ -1,0 +1,157 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each wrapper: picks an adaptive block plan (tuning.py — the acc chunk
+model), pads to the plan, dispatches the kernel, unpads.  ``interpret``
+defaults to True off-TPU so the same call sites validate on CPU and run
+Mosaic-compiled on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import tuning
+from .adjacent_difference import adjacent_difference_pallas
+from .artificial_work import artificial_work_pallas
+from .flash_attention import flash_attention_pallas
+from .reduce_scan import inclusive_scan_pallas, reduce_sum_pallas
+from .rmsnorm import rmsnorm_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_1d(x: jax.Array, padded: int, fill=0.0):
+    n = x.shape[0]
+    if padded == n:
+        return x
+    return jnp.pad(x, (0, padded - n), constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _adjdiff_call(x, block, interpret):
+    return adjacent_difference_pallas(x, block=block, interpret=interpret)
+
+
+def adjacent_difference(x: jax.Array, *, block: int | None = None,
+                        interpret: bool | None = None) -> jax.Array:
+    n = x.shape[0]
+    plan = tuning.plan_1d(n, bytes_per_elem=x.dtype.itemsize, arrays_in_vmem=3)
+    block = block or plan.block
+    padded = ((n + block - 1) // block) * block
+    interpret = _default_interpret() if interpret is None else interpret
+    out = _adjdiff_call(_pad_1d(x, padded), block, interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block", "interpret"))
+def _awork_call(x, iters, block, interpret):
+    return artificial_work_pallas(x, iters=iters, block=block,
+                                  interpret=interpret)
+
+
+def artificial_work(x: jax.Array, *, iters: int = 256,
+                    block: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    n = x.shape[0]
+    plan = tuning.plan_1d(n, bytes_per_elem=x.dtype.itemsize, arrays_in_vmem=2)
+    block = block or plan.block
+    padded = ((n + block - 1) // block) * block
+    interpret = _default_interpret() if interpret is None else interpret
+    return _awork_call(_pad_1d(x, padded), iters, block, interpret)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _rsum_call(x, block, interpret):
+    return reduce_sum_pallas(x, block=block, interpret=interpret)
+
+
+def reduce_sum(x: jax.Array, *, block: int | None = None,
+               interpret: bool | None = None) -> jax.Array:
+    n = x.shape[0]
+    plan = tuning.plan_1d(n, bytes_per_elem=x.dtype.itemsize, arrays_in_vmem=1)
+    block = block or plan.block
+    padded = ((n + block - 1) // block) * block
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rsum_call(_pad_1d(x, padded), block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _iscan_call(x, block, interpret):
+    return inclusive_scan_pallas(x, block=block, interpret=interpret)
+
+
+def inclusive_scan(x: jax.Array, *, block: int | None = None,
+                   interpret: bool | None = None) -> jax.Array:
+    n = x.shape[0]
+    plan = tuning.plan_1d(n, bytes_per_elem=x.dtype.itemsize, arrays_in_vmem=2)
+    block = block or plan.block
+    padded = ((n + block - 1) // block) * block
+    interpret = _default_interpret() if interpret is None else interpret
+    return _iscan_call(_pad_1d(x, padded), block, interpret)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _rmsnorm_call(x, gamma, eps, block_rows, interpret):
+    return rmsnorm_pallas(x, gamma, eps=eps, block_rows=block_rows,
+                          interpret=interpret)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
+            block_rows: int | None = None,
+            interpret: bool | None = None) -> jax.Array:
+    """x: (..., d) — leading dims flattened to rows."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = block_rows or min(128, max(8, rows))
+    padded = ((rows + block_rows - 1) // block_rows) * block_rows
+    if padded != rows:
+        x2 = jnp.pad(x2, ((0, padded - rows), (0, 0)))
+    interpret = _default_interpret() if interpret is None else interpret
+    out = _rmsnorm_call(x2, gamma, eps, block_rows, interpret)
+    return out[:rows].reshape(shape)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None,
+                    block_q: int | None = None, block_kv: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Padded + adaptively-tiled flash attention.  Shapes as in
+    flash_attention_pallas; arbitrary Sq/Skv (padding handled here)."""
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    if block_q is None or block_kv is None:
+        bq, bk = tuning.plan_attention(sq, skv, d,
+                                       bytes_per_elem=q.dtype.itemsize)
+        block_q = block_q or bq
+        block_kv = block_kv or bk
+    block_q = min(block_q, max(8, sq))
+    block_kv = min(block_kv, max(128, skv))
+    sq_p = ((sq + block_q - 1) // block_q) * block_q
+    skv_p = ((skv + block_kv - 1) // block_kv) * block_kv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    interpret = _default_interpret() if interpret is None else interpret
+    out = _flash_call(qp, kp, vp, causal, window, scale, skv,
+                      block_q, block_kv, sq, interpret)
+    return out[:, :, :sq]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "kv_len", "block_q", "block_kv", "sq_true",
+    "interpret"))
+def _flash_call(q, k, v, causal, window, scale, kv_len, block_q, block_kv,
+                sq_true, interpret):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale, kv_len=kv_len,
+        sq_true=sq_true, block_q=block_q, block_kv=block_kv,
+        interpret=interpret)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernels for chunked reduction and prefix sum.
+
+Reduction: each grid step writes its block's partial into out[i]; the
+(grid,)-sized partial vector is combined outside (two-phase, like the
+algorithm layer and the paper's chunked map-reduce).
+
+Scan: three-phase chunk-parallel prefix sum —
+  (1) kernel pass computes per-block inclusive scans and block totals,
+  (2) an exclusive scan over the (grid,) totals (negligible, jnp),
+  (3) kernel pass adds each block's offset.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], dtype=jnp.float32).reshape(1).astype(
+        o_ref.dtype)
+
+
+def reduce_sum_pallas(x: jax.Array, *, block: int,
+                      interpret: bool = True) -> jax.Array:
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = n // block
+    partials = pl.pallas_call(
+        _reduce_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return jnp.sum(partials, dtype=jnp.float32).astype(x.dtype)
+
+
+def _scan_local_kernel(x_ref, scan_ref, total_ref):
+    xf = x_ref[...].astype(jnp.float32)
+    s = jnp.cumsum(xf)
+    scan_ref[...] = s.astype(scan_ref.dtype)
+    total_ref[...] = s[-1:].astype(total_ref.dtype)
+
+
+def _scan_offset_kernel(scan_ref, off_ref, o_ref):
+    o_ref[...] = (scan_ref[...].astype(jnp.float32)
+                  + off_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def inclusive_scan_pallas(x: jax.Array, *, block: int,
+                          interpret: bool = True) -> jax.Array:
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = n // block
+    local, totals = pl.pallas_call(
+        _scan_local_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), x.dtype),
+                   jax.ShapeDtypeStruct((grid,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.float32), jnp.cumsum(totals)[:-1]])
+    return pl.pallas_call(
+        _scan_offset_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(local, offsets)

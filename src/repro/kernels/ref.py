@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+All functions are deliberately naive/direct: full-precision, full
+materialisation, no tiling.  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel outputs against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adjacent_difference_ref(x: jax.Array) -> jax.Array:
+    """out[0] = x[0]; out[i] = x[i] - x[i-1]."""
+    return jnp.concatenate([x[:1], x[1:] - x[:-1]])
+
+
+def artificial_work_ref(x: jax.Array, iters: int) -> jax.Array:
+    """Iterated FMA chain (the paper's compute-bound body)."""
+    def step(c, _):
+        return c * 1.000000119 + 0.1, None
+
+    out, _ = jax.lax.scan(step, x, None, length=iters)
+    return out
+
+
+def map_ref(x: jax.Array, fn) -> jax.Array:
+    return fn(x)
+
+
+def reduce_sum_ref(x: jax.Array) -> jax.Array:
+    return jnp.sum(x, dtype=jnp.float32).astype(x.dtype)
+
+
+def inclusive_scan_ref(x: jax.Array) -> jax.Array:
+    return jnp.cumsum(x, dtype=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf / rms) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Full-softmax multi-head attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0 (GQA).
+    ``window``: sliding-window size (attend to keys in (i-window, i]).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    skv = k.shape[2]
+    qi = jnp.arange(sq)[:, None] + (skv - sq)  # align ends (decode support)
+    kj = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

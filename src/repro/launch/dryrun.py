@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and record memory/cost/roofline artifacts.
+
+This file — and ONLY this file — forces 512 host platform devices (the
+two lines above run before any jax import).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch grok-1-314b \
+        --shape train_4k --mesh both
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..analysis import roofline
+from ..configs import ARCH_NAMES, SHAPES, get_config, get_shape, \
+    shape_applicable
+from ..core.acc import AdaptiveCoreChunk
+from ..core.executor import MeshExecutor
+from ..models import lm
+from ..optim import adamw
+from ..serve import engine as serve_engine
+from ..train import autotune, train_loop
+from . import mesh as mesh_lib
+from . import sharding
+
+DEFAULT_OUT = "runs/dryrun"
+
+
+def _mesh(multi_pod: bool):
+    m = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    return m, ("multi" if multi_pod else "single"), \
+        (512 if multi_pod else 256)
+
+
+def _serve_cfg(cfg):
+    # serving: bf16 weights, no optimizer state
+    return dataclasses.replace(cfg, param_dtype="bfloat16")
+
+
+def _long_window(cfg, shape):
+    if shape.name == "long_500k" and cfg.long_context_window:
+        return cfg.long_context_window
+    return cfg.attn_window
+
+
+def _act_sharding(cfg, mesh, shape, seq_shard: bool = False):
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    bspec = sharding.batch_specs(cfg, mesh, shape.global_batch)["tokens"]
+    # seq_shard: Megatron-SP style — the residual stream's sequence dim is
+    # sharded over 'model' between blocks, turning row-parallel activation
+    # all-reduces into reduce-scatter + all-gather pairs (half the bytes).
+    seq_ax = "model" if seq_shard else None
+    return NamedSharding(mesh, P(bspec[0], seq_ax, None))
+
+
+def _dp_extent(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def lower_train(cfg, shape, mesh, *, accum: int, attn_impl: str,
+                remat: bool, moment_dtype: str = "float32",
+                accum_dtype: str = "float32", seq_shard: bool = False,
+                moe_local: bool = False, bf16_params: bool = False,
+                moe_ff2d: bool = False):
+    from ..models import flags
+
+    if bf16_params:
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    opt_cfg = adamw.AdamWConfig(moment_dtype=moment_dtype,
+                                master_weights=bf16_params)
+    step = train_loop.make_train_step(cfg, opt_cfg, accum=accum,
+                                      attn_impl=attn_impl, remat=remat,
+                                      accum_dtype=accum_dtype)
+    params_s = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    opt_s = jax.eval_shape(functools.partial(adamw.init_state, cfg=opt_cfg),
+                           params_s)
+    from ..data import input_specs
+
+    batch_s = input_specs(cfg, shape)
+    pspec = sharding.param_specs(params_s, mesh, moe_ff2d=moe_ff2d)
+    ospec = sharding.opt_specs(pspec, master=bf16_params)
+    bspec = sharding.batch_specs(cfg, mesh, shape.global_batch)
+    bspec = {k: bspec[k] for k in batch_s}
+    in_sh = (sharding.to_shardings(mesh, pspec),
+             sharding.to_shardings(mesh, ospec),
+             sharding.to_shardings(mesh, bspec))
+    out_sh = (in_sh[0], in_sh[1], None)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+    with flags.activation_sharding(_act_sharding(cfg, mesh, shape,
+                                                 seq_shard)), \
+            flags.moe_dispatch_groups(_dp_extent(mesh) if moe_local
+                                      else None):
+        return jitted.lower(params_s, opt_s, batch_s)
+
+
+def lower_prefill(cfg, shape, mesh, *, attn_impl: str):
+    cfg = _serve_cfg(cfg)
+    window = _long_window(cfg, shape)
+    step = serve_engine.make_prefill_step(cfg, window=window,
+                                          attn_impl=attn_impl)
+    params_s = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    from ..data import input_specs
+
+    batch_s = input_specs(cfg, shape)
+    pspec = sharding.param_specs(params_s, mesh)
+    bspec = sharding.batch_specs(cfg, mesh, shape.global_batch)
+    bspec = {k: bspec[k] for k in batch_s}
+    jitted = jax.jit(step,
+                     in_shardings=(sharding.to_shardings(mesh, pspec),
+                                   sharding.to_shardings(mesh, bspec)))
+    from ..models import flags
+
+    with flags.activation_sharding(_act_sharding(cfg, mesh, shape)):
+        return jitted.lower(params_s, batch_s)
+
+
+def lower_decode(cfg, shape, mesh, *, cache_seq_model: bool = False,
+                 serve_no_fsdp: bool = False):
+    cfg = _serve_cfg(cfg)
+    window = _long_window(cfg, shape)
+    step = serve_engine.make_decode_step(cfg, window=window)
+    params_s = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    caches_s = jax.eval_shape(
+        lambda: lm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                               window=window))
+    cache_len = min(window, shape.seq_len) if window else shape.seq_len
+    tokens_s = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+    pspec = sharding.param_specs(
+        params_s, mesh, drop_axes=("data",) if serve_no_fsdp else ())
+    cspec = sharding.cache_specs(cfg, mesh, shape.global_batch, cache_len,
+                                 seq_over_model=cache_seq_model)
+    bspec_all = sharding.batch_specs(cfg, mesh, shape.global_batch)
+    from jax.sharding import PartitionSpec as P
+
+    feats_s = None
+    feats_sh = None
+    if cfg.frontend == "vision":  # cross-attn layers read image embeddings
+        feats_s = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.num_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+        feats_sh = sharding.to_shardings(
+            mesh, bspec_all.get("frontend_feats", P()))
+
+    in_sh = (sharding.to_shardings(mesh, pspec),
+             sharding.to_shardings(mesh, cspec),
+             sharding.to_shardings(mesh, bspec_all["tokens"]),
+             sharding.to_shardings(mesh, P()),
+             feats_sh)
+    out_sh = (None, in_sh[1])
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+    from ..models import flags
+
+    with flags.activation_sharding(_act_sharding(cfg, mesh, shape)):
+        return jitted.lower(params_s, caches_s, tokens_s, pos_s, feats_s)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             out_dir: str, use_acc: bool = True, accum: int | None = None,
+             attn_impl: str = "chunked", remat: bool = True,
+             moment_dtype: str = "float32", accum_dtype: str = "float32",
+             seq_shard: bool = False, cache_seq_model: bool = False,
+             moe_local: bool = False, serve_no_fsdp: bool = False,
+             bf16_params: bool = False, moe_ff2d: bool = False,
+             verbose: bool = True, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    mesh, mesh_name, chips = _mesh(multi_pod)
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": reason}
+        _save(out_dir, cell_id, rec)
+        if verbose:
+            print(f"SKIP  {arch:22s} {shape_name:12s} {mesh_name:6s} {reason}")
+        return rec
+
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            if accum is None:
+                if use_acc:
+                    mexec = MeshExecutor(mesh, data_axes=("pod", "data"))
+                    plan = autotune.choose_plan(cfg, shape, mexec)
+                    accum = plan.accum
+                else:
+                    accum = 1
+            lowered = lower_train(cfg, shape, mesh, accum=accum,
+                                  attn_impl=attn_impl, remat=remat,
+                                  moment_dtype=moment_dtype,
+                                  accum_dtype=accum_dtype,
+                                  seq_shard=seq_shard,
+                                  moe_local=moe_local,
+                                  bf16_params=bf16_params,
+                                  moe_ff2d=moe_ff2d)
+        elif shape.kind == "prefill":
+            lowered = lower_prefill(cfg, shape, mesh, attn_impl=attn_impl)
+        else:
+            lowered = lower_decode(cfg, shape, mesh,
+                                   cache_seq_model=cache_seq_model,
+                                   serve_no_fsdp=serve_no_fsdp)
+        compiled = lowered.compile()
+        t1 = time.time()
+        if shape.kind == "decode":
+            # the decode path is loop-free (python layer loop, einsum
+            # attention): cost analysis needs no calibration
+            report = roofline.analyze(compiled, cfg=cfg, shape=shape,
+                                      mesh_name=mesh_name, chips=chips)
+        else:
+            report = _calibrated_report(
+                compiled, cfg, shape, mesh, mesh_name, chips,
+                attn_impl=attn_impl, remat=remat,
+                moment_dtype=moment_dtype, accum_dtype=accum_dtype,
+                seq_shard=seq_shard, moe_local=moe_local,
+                bf16_params=bf16_params, moe_ff2d=moe_ff2d)
+        rec = report.to_dict()
+        rec.update(cell=cell_id, status="ok", accum=accum,
+                   compile_s=t1 - t0,
+                   memory_analysis=str(compiled.memory_analysis()))
+        _save(out_dir, cell_id, rec)
+        if verbose:
+            print(f"OK    {roofline.format_row(report)}  "
+                  f"(compile {t1-t0:.0f}s, accum={accum})")
+        return rec
+    except Exception as e:  # noqa: BLE001 - report and continue the sweep
+        rec = {"cell": cell_id, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+        _save(out_dir, cell_id, rec)
+        if verbose:
+            print(f"FAIL  {arch:22s} {shape_name:12s} {mesh_name:6s} "
+                  f"{type(e).__name__}: {str(e)[:160]}")
+        return rec
+
+
+def _calibrated_report(full_compiled, cfg, shape, mesh, mesh_name, chips, *,
+                       attn_impl: str, remat: bool,
+                       moment_dtype: str = "float32",
+                       accum_dtype: str = "float32",
+                       seq_shard: bool = False, moe_local: bool = False,
+                       bf16_params: bool = False,
+                       moe_ff2d: bool = False):
+    """Loop-calibrated roofline (see roofline.analyze_calibrated): lower
+    the cell with one pattern group and with zero layers, inner loops
+    unrolled, accum=1 (grad accumulation conserves total flops)."""
+    from ..models import flags
+
+    period = len(cfg.block_pattern)
+    multiplier = cfg.n_layers / period
+    cfg_a = dataclasses.replace(cfg, n_layers=period)
+    cfg_b = dataclasses.replace(cfg, n_layers=0)
+    with flags.unroll_for_accounting():
+        if shape.kind == "train":
+            comp_a = lower_train(cfg_a, shape, mesh, accum=1,
+                                 attn_impl=attn_impl, remat=remat,
+                                 moment_dtype=moment_dtype,
+                                 accum_dtype=accum_dtype,
+                                 seq_shard=seq_shard,
+                                 moe_local=moe_local,
+                                 bf16_params=bf16_params,
+                                 moe_ff2d=moe_ff2d).compile()
+            comp_b = lower_train(cfg_b, shape, mesh, accum=1,
+                                 attn_impl=attn_impl, remat=remat,
+                                 moment_dtype=moment_dtype,
+                                 accum_dtype=accum_dtype,
+                                 seq_shard=seq_shard,
+                                 moe_local=moe_local,
+                                 bf16_params=bf16_params,
+                                 moe_ff2d=moe_ff2d).compile()
+        else:
+            comp_a = lower_prefill(cfg_a, shape, mesh,
+                                   attn_impl=attn_impl).compile()
+            comp_b = lower_prefill(cfg_b, shape, mesh,
+                                   attn_impl=attn_impl).compile()
+    return roofline.analyze_calibrated(
+        full_compiled, comp_a, comp_b, multiplier, cfg=cfg, shape=shape,
+        mesh_name=mesh_name, chips=chips)
+
+
+def _save(out_dir: str, cell_id: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--no-acc", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--attn-impl", default="chunked",
+                    choices=["chunked", "naive", "flash", "skip"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--accum-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="Megatron-SP activation constraint (seq over "
+                         "'model' between blocks)")
+    ap.add_argument("--cache-seq-model", action="store_true",
+                    help="decode KV cache: shard seq dim over 'model'")
+    ap.add_argument("--moe-local", action="store_true",
+                    help="group-local MoE dispatch (no cross-shard "
+                         "capacity buffers)")
+    ap.add_argument("--moe-ff2d", action="store_true",
+                    help="weight-stationary expert TP: expert ff over "
+                         "both mesh axes, d unsharded (no gathers)")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="bf16 working params + sharded fp32 master "
+                         "in the optimizer (halves FSDP gather bytes)")
+    ap.add_argument("--serve-no-fsdp", action="store_true",
+                    help="decode: drop 'data' from weight specs (no "
+                         "per-token FSDP gathers; weights must fit TP)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, out_dir=args.out,
+                               use_acc=not args.no_acc, accum=args.accum,
+                               attn_impl=args.attn_impl,
+                               remat=not args.no_remat,
+                               moment_dtype=args.moment_dtype,
+                               accum_dtype=args.accum_dtype,
+                               seq_shard=args.seq_shard,
+                               cache_seq_model=args.cache_seq_model,
+                               moe_local=args.moe_local,
+                               serve_no_fsdp=args.serve_no_fsdp,
+                               bf16_params=args.bf16_params,
+                               moe_ff2d=args.moe_ff2d,
+                               tag=args.tag)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_fail += rec["status"] == "error"
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

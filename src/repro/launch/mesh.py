@@ -1,0 +1,40 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state): single-pod (16, 16) = (data, model) — one v5e
+pod slice of 256 chips — or multi-pod (2, 16, 16) = (pod, data, model),
+512 chips.  The dry-run launcher forces 512 host platform devices before
+any jax import; real launches get real device topologies.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU runs)."""
+    devs = jax.devices()
+    n = len(devs)
+    mp = model_parallel
+    while n % mp:
+        mp -= 1
+    arr = np.asarray(devs).reshape(n // mp, mp)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_axes(mesh):
+    """The PartitionSpec entry for a global-batch dimension."""
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)

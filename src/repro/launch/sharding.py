@@ -1,0 +1,214 @@
+"""Sharding rules: logical PartitionSpecs for params, optimizer state,
+batches and serve caches, with shape-aware divisibility fallbacks.
+
+Strategy (DESIGN.md §6):
+  * weights — Megatron TP over 'model' (column: out-dim, row: in-dim)
+    combined with FSDP over 'data' on the other dim; 'pod' is pure DP.
+  * MoE expert weights — stacked (E, ·, ·), expert dim replicated, inner
+    dims 2-D sharded (expert tensor parallelism).
+  * batches — batch dim over ('pod','data') when divisible.
+  * serve caches — batch over data axes when divisible, else sequence
+    (long-context SP); KV heads over 'model' when divisible, else head_dim.
+
+Any axis that does not divide its dim is dropped (never a compile error);
+the dry-run memory analysis shows the consequences and the perf loop
+iterates on them.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import mesh as mesh_lib
+
+# (path-suffix regex, spec for the TRAILING dims of the leaf)
+_RULES: list[tuple[str, tuple]] = [
+    (r"(wq|wk|wv)/w$", ("data", "model")),
+    (r"(wq|wk|wv)/b$", ("model",)),
+    (r"wo/w$", ("model", "data")),
+    (r"(w_up|w_gate)/w$", ("data", "model")),
+    (r"w_down/w$", ("model", "data")),
+    (r"router/w$", (None, None)),
+    (r"moe/(w_up|w_gate)$", (None, "data", "model")),
+    (r"moe/w_down$", (None, "model", "data")),
+    (r"in_proj/w$", ("data", "model")),
+    (r"out_proj/w$", ("model", "data")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"w_if/w$", ("data", None)),
+    (r"w_o/w$", ("data", "model")),
+    (r"w_zifo/w$", ("data", "model")),
+    (r"proj/w$", ("data", "model")),
+    (r"embed/table$", ("model", None)),
+    (r"lm_head/w$", ("data", "model")),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _fit(shape: tuple[int, ...], trailing: tuple, axis_sizes: dict) -> P:
+    """Pad the trailing spec to ndim and drop non-dividing axes."""
+    spec: list = [None] * (len(shape) - len(trailing)) + list(trailing)
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = axis_sizes.get(ax)
+        if size and dim % size == 0 and dim >= size:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# Weight-stationary expert rules (--moe-ff2d): expert ff sharded over BOTH
+# mesh axes, d unsharded — no weight or dispatch-buffer gathers at all
+# (the contraction-dim 'data' sharding of the FSDP rules is what forces
+# GSPMD to regather the MoE dispatch path; see EXPERIMENTS.md §Perf).
+_MOE_FF2D_RULES: list[tuple[str, tuple]] = [
+    (r"moe/(w_up|w_gate)$", (None, None, ("data", "model"))),
+    (r"moe/w_down$", (None, ("data", "model"), None)),
+]
+
+
+def _fit2(shape, trailing, axis_sizes):
+    out = []
+    spec = [None] * (len(shape) - len(trailing)) + list(trailing)
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, tuple):
+            size = 1
+            for a in ax:
+                size *= axis_sizes.get(a, 1)
+            out.append(ax if dim % size == 0 and dim >= size else None)
+        else:
+            size = axis_sizes.get(ax)
+            out.append(ax if size and dim % size == 0 and dim >= size
+                       else None)
+    return P(*out)
+
+
+def param_specs(params: Any, mesh, drop_axes: tuple = (),
+                moe_ff2d: bool = False) -> Any:
+    """``drop_axes``: remove these mesh axes from weight specs — e.g.
+    serving drops 'data' (no optimizer state to shard; FSDP gathers per
+    decoded token would dominate the step).  ``moe_ff2d``: use the
+    weight-stationary expert rules."""
+    axis_sizes = dict(mesh.shape)
+    rules = (_MOE_FF2D_RULES + _RULES) if moe_ff2d else _RULES
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        for pat, trailing in rules:
+            if re.search(pat, ps):
+                t = tuple(None if (not isinstance(a, tuple)
+                                   and a in drop_axes) else a
+                          for a in trailing)
+                specs.append(_fit2(leaf.shape, t, axis_sizes))
+                break
+        else:
+            specs.append(P())
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def opt_specs(param_spec_tree: Any, master: bool = False) -> dict:
+    out = {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+    if master:
+        out["master"] = param_spec_tree
+    return out
+
+
+def batch_specs(cfg: ArchConfig, mesh, global_batch: int) -> dict:
+    bax = mesh_lib.batch_axes(mesh)
+    n_data = 1
+    for a in mesh_lib.data_axes(mesh):
+        n_data *= mesh.shape[a]
+    bspec = bax if (global_batch % n_data == 0 and global_batch >= n_data) \
+        else None
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.frontend == "vision":
+        out["frontend_feats"] = P(bspec, None, None)
+    return out
+
+
+def _heads_spec(n_heads: int, head_dim: int, axis_sizes: dict
+                ) -> tuple[Any, Any]:
+    """(heads_axis, head_dim_axis): prefer sharding KV heads over 'model';
+    fall back to head_dim (contraction dim → psum) when heads don't
+    divide."""
+    m = axis_sizes.get("model", 1)
+    if n_heads % m == 0 and n_heads >= m:
+        return "model", None
+    if head_dim % m == 0 and head_dim >= m:
+        return None, "model"
+    return None, None
+
+
+def cache_specs(cfg: ArchConfig, mesh, global_batch: int,
+                cache_len: int, *, seq_over_model: bool = False) -> list:
+    """Per-layer cache PartitionSpecs mirroring lm.init_caches.
+
+    ``seq_over_model``: shard the KV cache sequence dim over 'model'
+    instead of KV heads / head_dim — for MQA/GQA archs whose kv heads
+    don't divide the model axis, this turns the decode attention psum
+    from O(B·H·S) logits into O(B·H·D) partials + tiny softmax stats
+    (perf-iteration lever, §Perf cell 2)."""
+    axis_sizes = dict(mesh.shape)
+    bax = mesh_lib.batch_axes(mesh)
+    n_data = 1
+    for a in mesh_lib.data_axes(mesh):
+        n_data *= mesh.shape[a]
+    batch_ok = global_batch % n_data == 0 and global_batch >= n_data
+    bspec = bax if batch_ok else None
+    # When the batch can't occupy the data axes, shard the cache sequence
+    # dim instead (long-context sequence parallelism).
+    data_ax = "data" if not batch_ok else None
+    hax, dax = _heads_spec(cfg.n_kv_heads, cfg.head_dim_, axis_sizes)
+
+    specs: list = []
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "shared_attn"):
+            if seq_over_model and cache_len % axis_sizes.get("model", 1) == 0:
+                kv = P(bspec, None, "model", None)
+            else:
+                seq_ax = data_ax if (data_ax and cache_len % axis_sizes.get(
+                    "data", 1) == 0) else None
+                kv = P(bspec, hax, seq_ax, dax)
+            specs.append({"k": kv, "v": kv})
+        elif kind == "cross_attn":
+            specs.append(None)
+        elif kind == "mamba2":
+            h = cfg.ssm_heads
+            hm = "model" if h % axis_sizes.get("model", 1) == 0 else None
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+            cm_ = "model" if conv_ch % axis_sizes.get("model", 1) == 0 else None
+            specs.append({"ssm": P(bspec, hm, None, None),
+                          "conv": P(bspec, None, cm_)})
+        elif kind == "mlstm":
+            pm = ("model" if cfg.ssm_head_dim % axis_sizes.get("model", 1) == 0
+                  else None)
+            specs.append({"mem": P(bspec, None, pm, None)})
+        elif kind == "slstm":
+            dm = ("model" if cfg.d_inner % axis_sizes.get("model", 1) == 0
+                  else None)
+            specs.append({"c": P(bspec, dm), "n": P(bspec, dm),
+                          "m": P(bspec, dm)})
+        else:
+            raise ValueError(kind)
+    return specs
+
+
+def to_shardings(mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,80 @@
+"""Shared model-layer primitives (pure-functional, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class KeyGen:
+    """Sequential PRNG key splitter."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    out = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        out = out + p["b"].astype(compute_dtype)
+    return out
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p: dict, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * rms) * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (rotate-half convention)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin of shape (..., head_dim // 2)."""
+    half = head_dim // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, D); cos/sin: (S, D/2) (broadcast over B, H)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

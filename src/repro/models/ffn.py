@@ -1,0 +1,30 @@
+"""Feed-forward blocks: gated GLU (llama-style) or plain MLP."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+
+
+def init(key, cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    kg = cm.KeyGen(key)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"w_up": cm.linear_init(kg(), d, ff, dtype=dt),
+         "w_down": cm.linear_init(kg(), ff, d, dtype=dt)}
+    if cfg.ffn_gated:
+        p["w_gate"] = cm.linear_init(kg(), d, ff, dtype=dt)
+    return p
+
+
+def apply(p: dict, x, cfg: ArchConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    act = cm.act_fn(cfg.act)
+    up = cm.linear(p["w_up"], x, cd)
+    if cfg.ffn_gated:
+        up = act(cm.linear(p["w_gate"], x, cd)) * up
+    else:
+        up = act(up)
+    return cm.linear(p["w_down"], up, cd)

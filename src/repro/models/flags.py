@@ -1,0 +1,81 @@
+"""Trace-time flags.
+
+UNROLL_FOR_ACCOUNTING: when True, inner sequence loops (chunked-attention
+kv blocks, GLA chunk scan) trace as python loops instead of lax.scan.
+XLA's cost analysis counts a while-loop body once regardless of trip
+count (verified experimentally), so the dry-run's *accounting* lowerings
+unroll them to get true FLOP/byte/collective totals; the *deliverable*
+lowerings keep scans (fast compiles, correct memory analysis).
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL_FOR_ACCOUNTING = False
+
+# NamedSharding (or None) pinning the residual stream (B, S, d).  Without
+# it GSPMD may resolve the FSDP weight/batch 'data'-axis conflict by
+# all-gathering the *batch* (observed: 16× attention flops per device on
+# the single-pod mesh); constraining activations forces the intended
+# weight-gather resolution.  Set by the launch layer around trace time.
+ACT_SHARDING = None
+
+# MoE dispatch locality: number of token groups (= data-axis extent).
+# None/1 = global dispatch (baseline: capacity positions via a cumsum
+# over the GLOBAL token axis — GSPMD turns the scatter into full-buffer
+# all-reduces over 'data').  Set to the dp extent for group-local
+# dispatch: tokens never leave their data shard (§Perf iteration).
+MOE_DISPATCH_GROUPS = None
+
+
+@contextlib.contextmanager
+def unroll_for_accounting():
+    global UNROLL_FOR_ACCOUNTING
+    prev = UNROLL_FOR_ACCOUNTING
+    UNROLL_FOR_ACCOUNTING = True
+    try:
+        yield
+    finally:
+        UNROLL_FOR_ACCOUNTING = prev
+
+
+@contextlib.contextmanager
+def activation_sharding(named_sharding):
+    global ACT_SHARDING
+    prev = ACT_SHARDING
+    ACT_SHARDING = named_sharding
+    try:
+        yield
+    finally:
+        ACT_SHARDING = prev
+
+
+@contextlib.contextmanager
+def moe_dispatch_groups(g):
+    global MOE_DISPATCH_GROUPS
+    prev = MOE_DISPATCH_GROUPS
+    MOE_DISPATCH_GROUPS = g
+    try:
+        yield
+    finally:
+        MOE_DISPATCH_GROUPS = prev
+
+
+def constrain_batch0(x):
+    """Pin only the leading (group/batch) axis of a 3-d tensor to the
+    active activation sharding's batch axes (used for MoE buffers)."""
+    if ACT_SHARDING is None or x.ndim != 3:
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = ACT_SHARDING.spec
+    ns = NamedSharding(ACT_SHARDING.mesh, P(spec[0], None, None))
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def constrain(x):
+    """Apply the activation constraint if one is active (trace time)."""
+    if ACT_SHARDING is not None and x.ndim == 3:
+        return __import__("jax").lax.with_sharding_constraint(x, ACT_SHARDING)
+    return x

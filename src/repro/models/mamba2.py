@@ -1,0 +1,127 @@
+"""Mamba2 (SSD) block, built on the chunked gated-linear-attention engine
+(models/gla.py) — the SSD duality: q=C, k=B, v=x, log-decay = Δ·A,
+log-gain = log Δ.
+
+Parallel (train/prefill) path: chunked_gla.  Decode path: O(1) recurrent
+``gla_step`` + depthwise-conv ring state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+from . import gla
+
+
+def init(key, cfg: ArchConfig) -> dict:
+    kg = cm.KeyGen(key)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_ch = di + 2 * n
+    return {
+        # order: z (gate), x, B, C, dt
+        "in_proj": cm.linear_init(kg(), d, 2 * di + 2 * n + h, dtype=dt),
+        "conv_w": (jax.random.normal(kg(), (cfg.conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((h,), dt),               # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((h,), dt),
+        "d_skip": jnp.ones((h,), dt),
+        "out_proj": cm.linear_init(kg(), di, d, dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: (B, L, C); w: (W, C).
+    ``state``: (B, W-1, C) carry-in; returns (out, new_state)."""
+    bsz, l, c = x.shape
+    wlen = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, wlen - 1, c), x.dtype)
+    ext = jnp.concatenate([state, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(wlen):
+        out = out + ext[:, i:i + l].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    new_state = ext[:, -(wlen - 1):] if wlen > 1 else state
+    return (jax.nn.silu(out + b.astype(jnp.float32))).astype(x.dtype), new_state
+
+
+def _project(p, xin, cfg: ArchConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cd = jnp.dtype(cfg.compute_dtype)
+    zxbcdt = cm.linear(p["in_proj"], xin, cd)
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    b_ = zxbcdt[..., 2 * di:2 * di + n]
+    c_ = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt_raw = zxbcdt[..., 2 * di + 2 * n:]
+    return z, x, b_, c_, dt_raw
+
+
+def apply(p: dict, xin: jax.Array, cfg: ArchConfig, *,
+          state: dict | None = None) -> tuple[jax.Array, dict | None]:
+    """xin: (B, L, d).  state (decode): {"ssm": (B,H,N,P), "conv": (B,W-1,C)}.
+
+    Parallel path when state is None; recurrent when a state is given
+    (then L is the number of new tokens, scanned one by one)."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    z, x, b_, c_, dt_raw = _project(p, xin, cfg)
+
+    conv_in = jnp.concatenate([x, b_, c_], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    x = conv_out[..., :di]
+    b_ = conv_out[..., di:di + n]
+    c_ = conv_out[..., di + n:]
+
+    bsz, l, _ = xin.shape
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (h,)
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))  # (B,L,h)
+    log_decay = delta * a                                  # (B,L,h)
+    log_gain = jnp.log(delta + 1e-9)
+
+    xh = x.reshape(bsz, l, h, hd)
+    qh = jnp.broadcast_to(c_[:, :, None, :], (bsz, l, h, n))
+    kh = jnp.broadcast_to(b_[:, :, None, :], (bsz, l, h, n))
+
+    if state is None:
+        pad = (-l) % gla.DEFAULT_CHUNK
+        if pad:
+            padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+            qh, kh, xh = padf(qh), padf(kh), padf(xh)
+            log_decay, log_gain = padf(log_decay), padf(log_gain)
+        y, s_final = gla.chunked_gla(qh, kh, xh, log_decay, log_gain)
+        y = y[:, :l]
+        new_state = {"ssm": s_final, "conv": new_conv}
+    else:
+        s = state["ssm"]
+        ys = []
+        for t in range(l):
+            yt, s = gla.gla_step(qh[:, t], kh[:, t], xh[:, t],
+                                 log_decay[:, t], log_gain[:, t], s)
+            ys.append(yt)
+        y = jnp.stack(ys, axis=1)
+        new_state = {"ssm": s, "conv": new_conv}
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh[:, :l].astype(jnp.float32)
+    y = y.reshape(bsz, l, di).astype(cd)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    return cm.linear(p["out_proj"], y, cd), new_state
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    h, n, hd = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * n
+    return {"ssm": jnp.zeros((batch, h, n, hd), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype)}

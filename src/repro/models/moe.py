@@ -1,0 +1,120 @@
+"""Mixture-of-Experts: top-k router with capacity-bounded scatter dispatch.
+
+Dispatch avoids the GShard one-hot einsum (tokens × E × C memory blow-up):
+positions come from an exclusive cumsum of the per-expert one-hot
+(tokens×k × E ints), tokens are scatter-added into the (E·C, d) expert
+buffer, and combined back by gather.  Peak extra memory is E·C·d —
+directly controlled by the acc microbatching decision (smaller chunks ⇒
+smaller dispatch buffers), which is the paper's chunking lever applied to
+MoE.
+
+Expert FFNs are computed with per-expert stacked weights (E, d, ff); the
+launch layer shards them 2-D (d over 'data', ff over 'model') — expert
+tensor parallelism.  An all_to_all expert-parallel variant exists as a
+hillclimb option in the launch layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+
+
+def init(key, cfg: ArchConfig) -> dict:
+    kg = cm.KeyGen(key)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    scale = d ** -0.5
+
+    def ew(d_in, d_out):
+        return (jax.random.normal(kg(), (e, d_in, d_out), jnp.float32)
+                * scale).astype(dt)
+
+    p = {"router": cm.linear_init(kg(), d, e, dtype=dt),
+         "w_up": ew(d, ff), "w_down": ew(ff, d)}
+    if cfg.ffn_gated:
+        p["w_gate"] = ew(d, ff)
+    return p
+
+
+def _dispatch_compute_combine(tokens, gate_idx, gate_w, p, cfg,
+                              capacity: int):
+    """Capacity dispatch + expert FFN + weighted combine for ONE token
+    group.  vmapped over groups in the local-dispatch path."""
+    t, d = tokens.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    oh = jax.nn.one_hot(gate_idx.reshape(-1), e, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(oh, axis=0) - oh
+    my_pos = jnp.sum(pos * oh, axis=-1)                         # (T*k,)
+    expert = gate_idx.reshape(-1)
+    keep = my_pos < capacity
+    dest = jnp.where(keep, expert * capacity + my_pos, e * capacity)
+
+    buf = jnp.zeros((e * capacity + 1, d), cd)
+    src = jnp.repeat(tokens.astype(cd), k, axis=0)              # token-major
+    buf = buf.at[dest].add(src * keep[:, None].astype(cd))
+    dispatched = buf[:-1].reshape(e, capacity, d)
+
+    act = cm.act_fn(cfg.act)
+    up = jnp.einsum("ecd,edf->ecf", dispatched, p["w_up"].astype(cd))
+    if cfg.ffn_gated:
+        up = act(jnp.einsum("ecd,edf->ecf", dispatched,
+                            p["w_gate"].astype(cd))) * up
+    else:
+        up = act(up)
+    eout = jnp.einsum("ecf,efd->ecd", up, p["w_down"].astype(cd))
+
+    flat = jnp.concatenate([eout.reshape(e * capacity, d),
+                            jnp.zeros((1, d), cd)])             # drop slot
+    per_choice = flat[dest] * (gate_w.reshape(-1, 1).astype(cd)
+                               * keep[:, None].astype(cd))
+    return per_choice.reshape(t, k, d).sum(axis=1)
+
+
+def apply(p: dict, x: jax.Array, cfg: ArchConfig
+          ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    from . import flags
+
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+
+    logits = cm.linear(p["router"], tokens, jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)                  # (T, k)
+    gate_w = gate_w / jnp.clip(jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    assign = jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32)
+    aux = e * jnp.sum(jnp.mean(assign, 0) * jnp.mean(probs, 0))
+
+    groups = flags.MOE_DISPATCH_GROUPS or 1
+    if groups > 1 and t % groups == 0 and t // groups >= 1:
+        # group-local dispatch: capacity positions and the scatter are
+        # computed within each data shard, so no cross-shard buffer
+        # reductions exist to partition (§Perf; baseline = global path).
+        tl = t // groups
+        capacity = max(-(-tl * k // e) * cfg.capacity_factor, 1.0)
+        capacity = int(max(capacity, min(tl, 16)))
+        out = jax.vmap(
+            lambda tk, gi, gw, pp: _dispatch_compute_combine(
+                tk, gi, gw, pp, cfg, capacity),
+            in_axes=(0, 0, 0, None))(
+            flags.constrain_batch0(tokens.reshape(groups, tl, d)),
+            gate_idx.reshape(groups, tl, k),
+            gate_w.reshape(groups, tl, k), p)
+        out = out.reshape(t, d)
+    else:
+        # Statistical capacity, floored so tiny (decode) batches never
+        # drop: with t <= 16 the worst case (one hot expert) is cheap.
+        capacity = max(-(-t * k // e) * cfg.capacity_factor, 1.0)
+        capacity = int(max(capacity, min(t, 16)))
+        out = _dispatch_compute_combine(tokens, gate_idx, gate_w, p, cfg,
+                                        capacity)
+    return out.reshape(bsz, s, d), aux

@@ -1,0 +1,148 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel via the GLA
+engine) and sLSTM (scalar memory, stabilised exponential gating,
+lax.scan over time).
+
+Deviations documented in DESIGN.md: the mLSTM normaliser uses the
+sum-normaliser variant (denominator = GLA with v ≡ 1, floored at 1),
+which keeps the chunked form exact; the paper's running-max normaliser
+couples chunks sequentially.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+from . import gla
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ArchConfig) -> dict:
+    kg = cm.KeyGen(key)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": cm.linear_init(kg(), d, di, dtype=dt),
+        "wk": cm.linear_init(kg(), d, di, dtype=dt),
+        "wv": cm.linear_init(kg(), d, di, dtype=dt),
+        "w_if": cm.linear_init(kg(), d, 2 * h, dtype=dt),   # i, f gates
+        "w_o": cm.linear_init(kg(), d, di, dtype=dt),       # output gate
+        "out_proj": cm.linear_init(kg(), di, d, dtype=dt),
+    }
+
+
+def mlstm_apply(p: dict, xin: jax.Array, cfg: ArchConfig, *,
+                state: dict | None = None) -> tuple[jax.Array, dict | None]:
+    bsz, l, _ = xin.shape
+    di, h = cfg.d_inner, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    q = cm.linear(p["wq"], xin, cd).reshape(bsz, l, h, hd) * (hd ** -0.5)
+    k = cm.linear(p["wk"], xin, cd).reshape(bsz, l, h, hd)
+    v = cm.linear(p["wv"], xin, cd).reshape(bsz, l, h, hd)
+    gates = cm.linear(p["w_if"], xin, cd).astype(jnp.float32)
+    i_raw, f_raw = gates[..., :h], gates[..., h:]
+    log_f = jax.nn.log_sigmoid(f_raw)            # forget in (0,1)
+    log_i = jax.nn.log_sigmoid(i_raw)            # bounded input gate
+    o = jax.nn.sigmoid(cm.linear(p["w_o"], xin, cd).astype(jnp.float32))
+
+    # Append a ones-column to v: the extra output channel is the
+    # normaliser n·q computed by the same recurrence.
+    v1 = jnp.concatenate([v.astype(jnp.float32),
+                          jnp.ones((bsz, l, h, 1), jnp.float32)], axis=-1)
+
+    if state is None:
+        pad = (-l) % gla.DEFAULT_CHUNK
+        if pad:
+            padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+            qp, kp, vp = padf(q), padf(k), padf(v1)
+            ldp, lgp = padf(log_f), padf(log_i)
+        else:
+            qp, kp, vp, ldp, lgp = q, k, v1, log_f, log_i
+        y1, s_final = gla.chunked_gla(qp, kp, vp, ldp, lgp)
+        y1 = y1[:, :l]
+        new_state = {"mem": s_final}
+    else:
+        s = state["mem"]
+        ys = []
+        for t in range(l):
+            yt, s = gla.gla_step(q[:, t], k[:, t], v1[:, t],
+                                 log_f[:, t], log_i[:, t], s)
+            ys.append(yt)
+        y1 = jnp.stack(ys, axis=1)
+        new_state = {"mem": s}
+
+    num, den = y1[..., :hd], y1[..., hd:]
+    yh = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = (o.reshape(bsz, l, h, hd) * yh).reshape(bsz, l, di).astype(cd)
+    return cm.linear(p["out_proj"], y, cd), new_state
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> dict:
+    h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    return {"mem": jnp.zeros((batch, h, hd, hd + 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ArchConfig) -> dict:
+    kg = cm.KeyGen(key)
+    d, di = cfg.d_model, cfg.d_inner
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_zifo": cm.linear_init(kg(), d, 4 * di, dtype=dt),
+        "out_proj": cm.linear_init(kg(), di, d, dtype=dt),
+    }
+
+
+def slstm_apply(p: dict, xin: jax.Array, cfg: ArchConfig, *,
+                state: dict | None = None) -> tuple[jax.Array, dict | None]:
+    """Stabilised sLSTM (exponential gating with running max m)."""
+    bsz, l, _ = xin.shape
+    di = cfg.d_inner
+    cd = jnp.dtype(cfg.compute_dtype)
+    zifo = cm.linear(p["w_zifo"], xin, cd).astype(jnp.float32)
+    z = jnp.tanh(zifo[..., :di])
+    i_raw = zifo[..., di:2 * di]
+    f_raw = zifo[..., 2 * di:3 * di]
+    o = jax.nn.sigmoid(zifo[..., 3 * di:])
+
+    if state is None:
+        c0 = jnp.zeros((bsz, di), jnp.float32)
+        n0 = jnp.zeros((bsz, di), jnp.float32)
+        m0 = jnp.full((bsz, di), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inp):
+        c, n, m = carry
+        zt, it, ft = inp
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h = c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new), h
+
+    (c, n, m), hs = jax.lax.scan(
+        step, (c0, n0, m0),
+        (z.swapaxes(0, 1), i_raw.swapaxes(0, 1), f_raw.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1) * o
+    out = cm.linear(p["out_proj"], h.astype(cd), cd)
+    return out, {"c": c, "n": n, "m": m}
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> dict:
+    di = cfg.d_inner
+    return {"c": jnp.zeros((batch, di), jnp.float32),
+            "n": jnp.zeros((batch, di), jnp.float32),
+            "m": jnp.full((batch, di), -1e30, jnp.float32)}

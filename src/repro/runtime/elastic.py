@@ -1,0 +1,59 @@
+"""Elastic scaling: re-plan parallelism for a changed device pool.
+
+The paper's Eq. 7 is reused verbatim as the elastic-scaling rule: given
+the surviving devices, the acc model recomputes how many the workload can
+use at the target efficiency, and the checkpoint is resharded onto the new
+mesh.  Straggler mitigation is the C=8 over-decomposition (each device's
+work is split into C chunks, so one slow step costs 1/C of a device-step,
+and XLA can overlap the accumulation loop with collectives) — quantified
+in runtime/stragglers.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..core.acc import AdaptiveCoreChunk
+from ..core.cost_model import WorkloadProfile
+from ..core.executor import MeshExecutor
+
+
+def surviving_mesh(n_devices: int | None = None, *,
+                   model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Largest regular (data, model) mesh over the currently visible
+    devices (after a loss, the pool shrinks; keep the mesh rectangular)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(n_devices, len(devs))
+    mp = model_parallel
+    while n % mp:
+        mp -= 1
+    dp = n // mp
+    arr = np.asarray(devs[: dp * mp]).reshape(dp, mp)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def elastic_plan(cfg_profile: WorkloadProfile, n_elements: int,
+                 mesh: jax.sharding.Mesh,
+                 acc: AdaptiveCoreChunk | None = None):
+    """acc decision over the surviving mesh (Eq. 7 as the scaling rule)."""
+    acc = acc or AdaptiveCoreChunk()
+    mexec = MeshExecutor(mesh, data_axes=("data",))
+    return acc.decide_for_profile(mexec, cfg_profile, n_elements)
+
+
+def reshard(tree: Any, mesh: jax.sharding.Mesh, spec_tree: Any = None) -> Any:
+    """Move a (restored) pytree onto a new mesh.  ``spec_tree`` may be a
+    single PartitionSpec, a matching pytree, or None (replicate)."""
+    if spec_tree is None:
+        spec_tree = P()
+    if isinstance(spec_tree, P):
+        sharding = NamedSharding(mesh, spec_tree)
+        return jax.device_put(tree, sharding)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(tree, shardings)

@@ -1,0 +1,112 @@
+"""Serving engine: chunked prefill + batched decode with KV/SSM caches.
+
+The acc executor drives the prefill chunk size (the workload is the
+prompt; chunks are prefill segments) and — at the launch layer — how many
+devices a batch occupies.  ``make_prefill_step``/``make_decode_step``
+produce the jit-able pure functions the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.acc import AdaptiveCoreChunk
+from ..models import lm
+
+
+def make_decode_step(cfg: ArchConfig, *, window: int | None = None
+                     ) -> Callable:
+    """(params, caches, tokens (B,1), pos) → (logits (B,1,V), caches)."""
+
+    def decode_step(params, caches, tokens, pos, frontend_feats=None):
+        return lm.forward_cached(params, tokens, caches, pos, cfg,
+                                 window=window,
+                                 frontend_feats=frontend_feats)
+
+    return decode_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, window: int | None = None,
+                      attn_impl: str = "chunked") -> Callable:
+    """One-shot prefill: (params, tokens (B,S)) → (last logits, caches).
+
+    Uses the parallel (scan) forward for the hidden states, then writes
+    caches chunk-by-chunk via the cached path when caches are needed.
+    For the dry-run cell we lower the full-sequence forward (the compute
+    shape that matters); engine.prefill() below does the cache-building
+    variant for real serving."""
+
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(params, batch, cfg, window=window,
+                               attn_impl=attn_impl)
+        return logits[:, -1:]
+
+    return prefill_step
+
+
+class ServeEngine:
+    """Stateful wrapper used by the examples and integration tests."""
+
+    def __init__(self, cfg: ArchConfig, params, *, batch: int, max_len: int,
+                 window: int | None = None,
+                 acc: AdaptiveCoreChunk | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.window = window if window is not None else cfg.attn_window
+        self.max_len = max_len
+        self.caches = lm.init_caches(cfg, batch, max_len, window=self.window)
+        self.pos = 0
+        self.acc = acc or AdaptiveCoreChunk()
+        self._decode = jax.jit(make_decode_step(cfg, window=self.window))
+
+    def prefill(self, tokens: jax.Array, frontend_feats=None,
+                chunk: int | None = None) -> jax.Array:
+        """Chunked prefill; chunk size from the acc model unless given."""
+        bsz, s = tokens.shape
+        if chunk is None:
+            from ..core.executor import SequentialExecutor
+            from ..train.autotune import token_profile
+
+            d = self.acc.decide_for_profile(
+                SequentialExecutor(), token_profile(self.cfg, training=False),
+                s)
+            chunk = max(min(d.chunk_elems, s), 1)
+        logits = None
+        start = 0
+        while start < s:
+            step = min(chunk, s - start)
+            if self.window:
+                # a ring-buffer write must not cross the ring boundary
+                step = min(step, self.window,
+                           self.window - self.pos % self.window)
+            piece = tokens[:, start:start + step]
+            logits, self.caches = lm.forward_cached(
+                self.params, piece, self.caches, self.pos, self.cfg,
+                window=self.window, frontend_feats=frontend_feats)
+            self.pos += step
+            start += step
+        return logits
+
+    def decode(self, tokens: jax.Array, frontend_feats=None) -> jax.Array:
+        logits, self.caches = self._decode(
+            self.params, self.caches, tokens, self.pos, frontend_feats)
+        self.pos += tokens.shape[1]
+        return logits
+
+    def generate(self, prompt: jax.Array, n_new: int,
+                 frontend_feats=None) -> jax.Array:
+        """Greedy generation; returns (B, n_new) token ids."""
+        logits = self.prefill(prompt, frontend_feats)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        for _ in range(n_new):
+            out.append(tok)
+            logits, self.caches = self._decode(
+                self.params, self.caches, tok, self.pos, frontend_feats)
+            self.pos += 1
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return jnp.concatenate(out, axis=1)

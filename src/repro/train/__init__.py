@@ -1,0 +1,7 @@
+from .autotune import TrainPlan, choose_plan, token_profile
+from .grad_compress import init_error_feedback, make_compressed_dp_train_step
+from .train_loop import make_eval_step, make_loss_fn, make_train_step
+
+__all__ = ["make_train_step", "make_eval_step", "make_loss_fn",
+           "choose_plan", "TrainPlan", "token_profile",
+           "make_compressed_dp_train_step", "init_error_feedback"]

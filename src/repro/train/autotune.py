@@ -1,0 +1,64 @@
+"""acc-driven training autotuning: data-parallel width + microbatch count.
+
+This is the paper's executor applied at the training-loop level:
+
+* ``measure_iteration`` → analytic per-token step cost from MODEL_FLOPS
+  and the weight/activation traffic through the v5e roofline;
+* ``processing_units_count`` → how many mesh devices the step should
+  actually occupy (Eq. 7: small workloads leave devices free — elastic
+  scaling / multi-tenancy, exactly the paper's "leaves cores available for
+  other parallel tasks");
+* ``get_chunk_size`` → tokens per microbatch (Eq. 10, C chunks per core),
+  floored by the T_m rule so a microbatch still saturates the chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core.acc import AdaptiveCoreChunk
+from ..core.cost_model import WorkloadProfile
+from ..core.executor import MeshExecutor
+from ..core.overhead_law import AccDecision
+
+
+def token_profile(cfg: ArchConfig, *, training: bool = True) -> WorkloadProfile:
+    """Per-token cost of one step (per-device view is handled by acc)."""
+    n_active = cfg.active_param_count()
+    flops = (6.0 if training else 2.0) * n_active
+    # weight traffic dominates memory per step at large batch; activations
+    # are roughly d_model * n_layers * ~20 bytes/token
+    bytes_ = 20.0 * cfg.d_model * cfg.n_layers
+    return WorkloadProfile(flops_per_elem=flops, bytes_per_elem=bytes_,
+                           name=f"{cfg.name}-{'train' if training else 'serve'}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    data_parallel: int       # devices the step occupies (acc Eq. 7)
+    accum: int               # gradient-accumulation microbatches (Eq. 10)
+    microbatch: int          # sequences per microbatch (global)
+    decision: AccDecision
+
+
+def choose_plan(cfg: ArchConfig, shape: ShapeConfig,
+                mesh_exec: MeshExecutor,
+                acc: AdaptiveCoreChunk | None = None,
+                *, max_accum: int = 64) -> TrainPlan:
+    acc = acc or AdaptiveCoreChunk()
+    profile = token_profile(cfg, training=(shape.kind == "train"))
+    tokens = shape.global_batch * shape.seq_len
+    d = acc.decide_for_profile(mesh_exec, profile, tokens)
+
+    dp = d.n_cores
+    while dp > 1 and shape.global_batch % dp:
+        dp -= 1  # dp must divide the global batch
+    # chunk(tokens) -> microbatches: one microbatch must hold >= dp
+    # sequences (one per device) and divide the global batch.
+    seqs_per_chunk = max(d.chunk_elems // shape.seq_len, 1)
+    accum = max(min(shape.global_batch // max(seqs_per_chunk, 1), max_accum), 1)
+    while shape.global_batch % accum or (shape.global_batch // accum) % dp:
+        accum -= 1  # snap to a divisor compatible with the dp width
+    return TrainPlan(data_parallel=dp, accum=accum,
+                     microbatch=shape.global_batch // accum, decision=d)

@@ -1,0 +1,88 @@
+"""Training step with adaptive gradient-accumulation microbatching.
+
+The paper's chunk-size decision drives the microbatch count: the global
+batch is the "workload", one microbatch is one "chunk", and
+``autotune.choose_accum`` applies Eq. 10 (with the analytic per-token cost
+as ``measure_iteration``) to pick how many chunks a step is split into —
+large enough to amortise dispatch, small enough to bound activation
+memory (the VMEM/HBM analogue of the paper's T_m floor).
+
+``make_train_step`` builds a jit-able pure function
+(params, opt_state, batch) → (params, opt_state, metrics); distribution is
+applied by the launch layer via in/out shardings (pjit path) or by the
+explicit shard_map DP variant with int8 gradient compression
+(train/grad_compress.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from ..optim import adamw
+
+
+def make_loss_fn(cfg: ArchConfig, *, attn_impl: str = "chunked",
+                 remat: bool = True) -> Callable:
+    def loss(params, batch):
+        return lm.loss_fn(params, batch, cfg, attn_impl=attn_impl,
+                          remat=remat)
+    return loss
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
+                    accum: int = 1, attn_impl: str = "chunked",
+                    remat: bool = True, lr_fn: Callable | None = None,
+                    accum_dtype: str = "float32") -> Callable:
+    loss_fn = make_loss_fn(cfg, attn_impl=attn_impl, remat=remat)
+    adt = jnp.dtype(accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # Split the global batch into `accum` microbatches (chunks) and
+            # scan, accumulating gradients in `accum_dtype` (fp32 default;
+            # bf16 halves the accumulation buffer — perf-iteration lever).
+            def reshape(x):
+                b = x.shape[0]
+                assert b % accum == 0, (b, accum)
+                return x.reshape((accum, b // accum) + x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(adt), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: (g.astype(jnp.float32)
+                                            / accum), grads)
+
+        lr = lr_fn(opt_state["step"]) if lr_fn is not None else None
+        new_params, new_state, metrics = adamw.update(
+            grads, opt_state, params, opt_cfg, lr=lr)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, *, attn_impl: str = "chunked") -> Callable:
+    loss_fn = make_loss_fn(cfg, attn_impl=attn_impl, remat=False)
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step

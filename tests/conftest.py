@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+# Smoke tests and benches see the real (single) device; ONLY the dry-run
+# forces 512. Keep any inherited flag out.
+os.environ.pop("XLA_FLAGS", None)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+
+def run_with_devices(code: str, n_devices: int = 8,
+                     timeout: int = 560) -> subprocess.CompletedProcess:
+    """Run a python snippet in a subprocess with N fake CPU devices
+    (multi-device paths can't run in-process: jax locks device count)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
+               PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.fixture
+def subproc():
+    return run_with_devices

@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) for the acc execution-parameters
+object — the system's core invariants."""
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdaptiveCoreChunk, SequentialExecutor, SKYLAKE_40,
+                        StaticCoreChunk)
+from repro.core import overhead_law as ol
+from repro.core.simmachine import SimMachine
+
+
+class _FakeExec:
+    def __init__(self, n):
+        self._n = n
+
+    def num_units(self):
+        return self._n
+
+
+times = st.floats(min_value=1e-10, max_value=1e-3, allow_nan=False)
+counts = st.integers(min_value=1, max_value=10**8)
+cores = st.integers(min_value=1, max_value=4096)
+
+
+@given(t_iter=times, count=counts, t0=times, max_cores=cores)
+@settings(max_examples=200, deadline=None)
+def test_decision_invariants(t_iter, count, t0, max_cores):
+    d = ol.decide(t_iter=t_iter, n_elements=count, t0=t0,
+                  max_cores=max_cores)
+    assert 1 <= d.n_cores <= max_cores
+    assert 1 <= d.chunk_elems <= count
+    assert d.n_chunks * d.chunk_elems >= count
+    assert d.n_cores <= max(d.n_chunks, 1)
+    # the model never predicts worse-than-sequential execution
+    assert d.predicted_time <= d.t1 * (1 + 1e-9) or d.n_cores == 1
+
+
+@given(t_iter=times, t0=times, max_cores=st.integers(2, 512),
+       c1=st.integers(10, 10**7), c2=st.integers(10, 10**7))
+@settings(max_examples=200, deadline=None)
+def test_cores_monotone_in_workload(t_iter, t0, max_cores, c1, c2):
+    lo, hi = sorted((c1, c2))
+    d_lo = ol.decide(t_iter=t_iter, n_elements=lo, t0=t0,
+                     max_cores=max_cores)
+    d_hi = ol.decide(t_iter=t_iter, n_elements=hi, t0=t0,
+                     max_cores=max_cores)
+    assert d_hi.n_cores >= d_lo.n_cores  # bigger workload, >= cores
+
+
+@given(t_iter=st.floats(1e-9, 1e-6), count=st.integers(100, 10**7),
+       static_cores=st.integers(1, 40))
+@settings(max_examples=100, deadline=None)
+def test_acc_beats_static_under_model(t_iter, count, static_cores):
+    """The paper's claim, stated precisely: the acc decision is the
+    fastest configuration *among those meeting the efficiency target*
+    (Eq. 7 optimises for E=0.95, not raw minimum time — a static config
+    below the target may be faster but wastes cores; paper Section 5:
+    "it leaves cores available for other parallel tasks")."""
+    t0 = 18e-6
+    d = ol.decide(t_iter=t_iter, n_elements=count, t0=t0, max_cores=40)
+    static_time = ol.predicted_time(t_iter * count, static_cores, t0)
+    static_eff = ol.efficiency(t_iter * count, static_cores, t0)
+    if static_eff >= d.efficiency_target or static_cores == 1:
+        assert d.predicted_time <= static_time * (1 + 1e-9)
+    # and in the large-workload regime acc matches the unrestricted best
+    if t_iter * count >= 1000 * t0:
+        best = min(ol.predicted_time(t_iter * count, n, t0)
+                   for n in range(1, 41))
+        assert d.predicted_time <= best * 1.05
+
+
+@given(t_iter=st.floats(5e-10, 2e-7), count=st.integers(1000, 2 * 10**6))
+@settings(max_examples=30, deadline=None)
+def test_acc_tracks_envelope_on_simmachine(t_iter, count):
+    """acc within 25% of the best static config on the calibrated machine
+    model (noise, per-task overheads and core-dependent region overheads
+    the closed form doesn't know), and never below sequential."""
+    m = SimMachine(name="t", cores=40, t0=18e-6, t_task=0.6e-6, jitter=0.0)
+    d = ol.decide(t_iter=t_iter, n_elements=count, t0=m.t0_for(m.cores),
+                  max_cores=40)
+    t_acc = m.run_decision(d)
+    t_seq = t_iter * count
+    best_static = min(
+        m.run(t_iter=t_iter, count=count, n_cores=n,
+              chunk_elems=max(count // (n * 4), 1))
+        for n in (1, 2, 4, 8, 16, 32, 40))
+    assert t_acc <= max(best_static * 1.25, t_seq * 1.001)
+
+
+def test_acc_customization_point_dispatch_order():
+    """params overloads beat executor methods beat defaults (tag_invoke)."""
+    from repro.core import customization as cp
+
+    class ExecWithCP(SequentialExecutor):
+        def processing_units_count(self, t_iter, count):
+            return 7
+
+    acc = AdaptiveCoreChunk(t0_override=1e-5)
+    ex = ExecWithCP()
+    # params (acc) takes precedence over the executor overload
+    n = cp.processing_units_count(acc, ex, 1e-6, 10)
+    assert n == 1  # acc decides sequential for a tiny workload
+    # without params, the executor's overload wins over the default
+    n2 = cp.processing_units_count(None, ex, 1e-6, 10)
+    assert n2 == 7
+    # with neither, the default queries num_units
+    n3 = cp.processing_units_count(None, SequentialExecutor(), 1e-6, 10)
+    assert n3 == 1
+
+
+def test_static_params_match_openmp_semantics():
+    st_ = StaticCoreChunk(cores=8, chunks_per_core=2)
+    ex = _FakeExec(40)
+    assert st_.processing_units_count(ex, 0.0, 1000) == 8
+    assert st_.get_chunk_size(ex, 0.0, 8, 1000) == 63  # ceil(1000/16)
+
+
+def test_acc_caches_measurement():
+    acc = AdaptiveCoreChunk(t0_override=1e-5)
+    calls = []
+
+    def body(start, size):
+        calls.append(1)
+
+    ex = SequentialExecutor()
+    acc.measure_iteration(ex, body, 1000, key="k")
+    n_after_first = len(calls)
+    acc.measure_iteration(ex, body, 1000, key="k")
+    assert len(calls) == n_after_first  # measured once per workload key

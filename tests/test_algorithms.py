@@ -1,0 +1,130 @@
+"""Host-path tests for the parallel algorithm suite, across policies."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import algorithms as alg
+from repro.core import (AdaptiveCoreChunk, HostParallelExecutor,
+                        StaticCoreChunk, par, seq)
+
+
+@pytest.fixture(scope="module")
+def host():
+    ex = HostParallelExecutor(max_workers=4)
+    yield ex
+    ex.shutdown()
+
+
+def policies(host):
+    return [
+        ("seq", seq),
+        ("par-static", par.on(host).with_(StaticCoreChunk(4, 2))),
+        ("par-acc", par.on(host).with_(AdaptiveCoreChunk(t0_override=1e-5))),
+    ]
+
+
+@pytest.fixture(params=["seq", "par-static", "par-acc"])
+def policy(request, host):
+    return dict(policies(host))[request.param]
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jnp.asarray(np.random.RandomState(0).randn(4097).astype(np.float32))
+
+
+def test_transform(policy, x):
+    out = alg.transform(policy, x, lambda c: c * 2 + 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2 + 1,
+                               rtol=1e-6)
+
+
+def test_transform_binary(policy, x):
+    y = jnp.ones_like(x)
+    out = alg.transform(policy, x, lambda a, b: a * b + a, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2, rtol=1e-6)
+
+
+def test_copy_fill_generate(policy, x):
+    np.testing.assert_array_equal(np.asarray(alg.copy(policy, x)),
+                                  np.asarray(x))
+    f = alg.fill(policy, x, 3.5)
+    assert np.all(np.asarray(f) == 3.5)
+    g = alg.generate(policy, 100, lambda i: i * i)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  (np.arange(100) ** 2).astype(np.float32))
+
+
+def test_reduce(policy, x):
+    np.testing.assert_allclose(float(alg.reduce(policy, x, jnp.add)),
+                               np.sum(np.asarray(x), dtype=np.float32),
+                               rtol=1e-4)
+    assert float(alg.reduce(policy, x, jnp.maximum)) == np.max(np.asarray(x))
+    assert float(alg.reduce(policy, x, jnp.minimum)) == np.min(np.asarray(x))
+
+
+def test_transform_reduce_count_quantifiers(policy, x):
+    n = int(alg.count_if(policy, x, lambda c: c > 0))
+    assert n == int(np.sum(np.asarray(x) > 0))
+    assert bool(alg.all_of(policy, x, lambda c: c > -100))
+    assert bool(alg.any_of(policy, x, lambda c: c > 2))
+    assert bool(alg.none_of(policy, x, lambda c: c > 100))
+
+
+def test_min_max_element(policy, x):
+    v, i = alg.min_element(policy, x)
+    xs = np.asarray(x)
+    assert float(v) == xs.min() and xs[int(i)] == xs.min()
+    v, i = alg.max_element(policy, x)
+    assert float(v) == xs.max() and xs[int(i)] == xs.max()
+
+
+def test_scans(policy, x):
+    s = alg.inclusive_scan(policy, x)
+    np.testing.assert_allclose(np.asarray(s), np.cumsum(np.asarray(x)),
+                               rtol=1e-3, atol=1e-3)
+    e = alg.exclusive_scan(policy, x, 0.0)
+    assert float(e[0]) == 0.0
+    np.testing.assert_allclose(np.asarray(e)[1:],
+                               np.cumsum(np.asarray(x))[:-1],
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_adjacent_difference(policy, x):
+    d = alg.adjacent_difference(policy, x)
+    xs = np.asarray(x)
+    ref = np.concatenate([xs[:1], np.diff(xs)])
+    np.testing.assert_allclose(np.asarray(d), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_stencil3(policy, x):
+    out = alg.stencil3(policy, x)
+    xs = np.asarray(x)
+    ref = xs.copy()
+    ref[1:-1] = xs[:-2] - 2 * xs[1:-1] + xs[2:]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_artificial_work(policy):
+    x = jnp.ones((513,), jnp.float32)
+    out = alg.artificial_work(policy, x, iters=8)
+    assert out.shape == (513,)
+    assert np.all(np.isfinite(np.asarray(out)))
+    # matches the reference chain
+    from repro.kernels.ref import artificial_work_ref
+
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(artificial_work_ref(x, 8)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 129])
+def test_edge_sizes(host, n):
+    pol = par.on(host).with_(StaticCoreChunk(4, 2))
+    x = jnp.arange(n, dtype=jnp.float32)
+    d = alg.adjacent_difference(pol, x)
+    xs = np.asarray(x)
+    ref = np.concatenate([xs[:1], np.diff(xs)])
+    np.testing.assert_allclose(np.asarray(d), ref)
+    s = alg.inclusive_scan(pol, x)
+    np.testing.assert_allclose(np.asarray(s), np.cumsum(xs), rtol=1e-5)

@@ -1,0 +1,71 @@
+"""Roofline analysis unit tests: HLO collective parsing + model flops."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import roofline
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+HLO = """
+HloModule test
+%add { ... }
+%all-reduce.72 = f32[16,4096,1024]{2,1,0} all-reduce(%fusion.8), channel_id=89, replica_groups=[16,16]<=[256]
+%all-gather.79 = bf16[1024,128]{1,0} all-gather(%cvt.24), channel_id=1, dimensions={0}
+%ag-done = f32[8] all-gather-done(%x)
+%all-to-all.3 = s8[64,256]{1,0} all-to-all(%q), channel_id=4
+%collective-permute.1 = f32[2,2]{1,0} collective-permute(%p), channel_id=9
+%reduce-scatter.5 = f32[128]{0} reduce-scatter(%g), channel_id=11
+%not-a-collective = f32[10]{0} add(%a, %b)
+"""
+
+
+def test_collective_bytes_parser():
+    out = roofline.collective_bytes(HLO)
+    b = out["bytes"]
+    assert b["all-reduce"] == 16 * 4096 * 1024 * 4
+    assert b["all-gather"] == 1024 * 128 * 2
+    assert b["all-to-all"] == 64 * 256 * 1
+    assert b["collective-permute"] == 2 * 2 * 4
+    assert b["reduce-scatter"] == 128 * 4
+    assert b["total"] == sum(v for k, v in b.items()
+                             if k not in ("total", "wire_total"))
+    # ring wire model: all-reduce counts twice (RS + AG phases)
+    assert b["wire_total"] == b["total"] + b["all-reduce"]
+    assert out["counts"]["all-reduce"] == 1
+
+
+def test_parser_ignores_done_ops_and_noise():
+    out = roofline.collective_bytes(HLO)
+    # all-gather-done must not double count
+    assert out["counts"].get("all-gather") == 1
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen3-0.6b")
+    tr = roofline.model_flops(cfg, SHAPES["train_4k"])
+    de = roofline.model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6 * n * 4096 * 256)
+    assert de == pytest.approx(2 * n * 128)
+
+
+def test_model_flops_moe_uses_active():
+    cfg = get_config("grok-1-314b")
+    assert cfg.active_param_count() < cfg.param_count() * 0.5
+    tr = roofline.model_flops(cfg, SHAPES["train_4k"])
+    assert tr == pytest.approx(6 * cfg.active_param_count() * 4096 * 256)
+
+
+def test_analyze_on_real_compiled():
+    """End-to-end on a tiny real computation (1 device)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    f = jax.jit(lambda x: (x @ x).sum())
+    comp = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    rep = roofline.analyze(comp, cfg=cfg, shape=SHAPES["train_4k"],
+                           mesh_name="t", chips=1)
+    assert rep.flops_per_device > 0
+    assert rep.compute_s > 0
+    assert rep.dominant in ("compute", "memory", "collective")
+    d = rep.to_dict()
+    assert "roofline_fraction" in d and "step_time_s" in d

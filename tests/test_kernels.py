@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.kernels import ref as R
+from repro.kernels import tuning
+
+RS = np.random.RandomState(0)
+
+
+def arr(n, dtype):
+    return jnp.asarray(RS.randn(n).astype(np.float32)).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.mark.parametrize("n", [128, 1000, 4096, 65536 + 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adjacent_difference(n, dtype):
+    x = arr(n, dtype)
+    out = K.adjacent_difference(x)
+    ref = R.adjacent_difference_ref(x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("n", [128, 5000])
+@pytest.mark.parametrize("iters", [1, 16, 64])
+def test_artificial_work(n, iters):
+    x = arr(n, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.artificial_work(x, iters=iters)),
+        np.asarray(R.artificial_work_ref(x, iters)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [128, 1000, 4096, 30000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_reduce_sum(n, dtype):
+    x = arr(n, dtype)
+    np.testing.assert_allclose(float(K.reduce_sum(x)),
+                               float(R.reduce_sum_ref(x)),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("n", [128, 1000, 8192])
+def test_inclusive_scan(n):
+    x = arr(n, jnp.float32)
+    np.testing.assert_allclose(np.asarray(K.inclusive_scan(x)),
+                               np.asarray(R.inclusive_scan_ref(x)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("rows,d", [(8, 128), (100, 256), (257, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(rows, d, dtype):
+    x = jnp.asarray(RS.randn(rows, d).astype(np.float32)).astype(dtype)
+    g = jnp.asarray(RS.randn(d).astype(np.float32)).astype(dtype)
+    np.testing.assert_allclose(
+        np.asarray(K.rmsnorm(x, g), np.float32),
+        np.asarray(R.rmsnorm_ref(x, g), np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("sq,skv", [(64, 64), (40, 100), (128, 128)])
+def test_flash_attention_gqa(hq, hkv, sq, skv):
+    if sq > skv:
+        pytest.skip("q longer than kv")
+    q = jnp.asarray(RS.randn(2, hq, sq, 32).astype(np.float32))
+    k = jnp.asarray(RS.randn(2, hkv, skv, 32).astype(np.float32))
+    v = jnp.asarray(RS.randn(2, hkv, skv, 32).astype(np.float32))
+    out = K.flash_attention(q, k, v, causal=True, block_q=16, block_kv=64)
+    ref = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [1, 7, 64, 1000])
+def test_flash_attention_swa(window):
+    q = jnp.asarray(RS.randn(1, 2, 96, 32).astype(np.float32))
+    k = jnp.asarray(RS.randn(1, 2, 96, 32).astype(np.float32))
+    v = jnp.asarray(RS.randn(1, 2, 96, 32).astype(np.float32))
+    out = K.flash_attention(q, k, v, causal=True, window=window,
+                            block_q=32, block_kv=32)
+    ref = R.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RS.randn(1, 2, 64, 64).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(RS.randn(1, 2, 64, 64).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(RS.randn(1, 2, 64, 64).astype(np.float32)).astype(jnp.bfloat16)
+    out = K.flash_attention(q, k, v, causal=True, block_q=32, block_kv=64)
+    ref = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_noncausal():
+    q = jnp.asarray(RS.randn(1, 2, 48, 32).astype(np.float32))
+    k = jnp.asarray(RS.randn(1, 2, 80, 32).astype(np.float32))
+    v = jnp.asarray(RS.randn(1, 2, 80, 32).astype(np.float32))
+    out = K.flash_attention(q, k, v, causal=False, block_q=16, block_kv=32)
+    ref = R.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_tuning_plans():
+    p = tuning.plan_1d(10**6, bytes_per_elem=4)
+    assert p.block % tuning.LANE == 0
+    assert p.grid >= 8 or p.padded <= tuning.LANE * tuning.SUBLANE * 8
+    assert p.block * p.grid >= 10**6
+    bq, bk = tuning.plan_attention(4096, 4096, 128)
+    assert bq % tuning.SUBLANE == 0 and bk % tuning.LANE == 0
+    # VMEM budget respected
+    live = (2 * bq * 128 + 2 * bk * 128 + bq * bk) * 2 + bq * 128 * 4
+    from repro.core.hardware import TPU_V5E
+
+    assert live <= TPU_V5E.vmem_bytes * 0.5 / 2

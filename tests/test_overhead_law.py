@@ -1,0 +1,91 @@
+"""Unit tests for the paper's Section 3 equations."""
+import math
+
+import pytest
+
+from repro.core import overhead_law as ol
+
+
+def test_predicted_time_eq1():
+    # T_N = T1/N + T0 for N > 1; sequential pays no overhead
+    assert ol.predicted_time(1.0, 4, 0.1) == pytest.approx(0.35)
+    assert ol.predicted_time(1.0, 1, 0.1) == 1.0
+
+
+def test_speedup_eq3():
+    # S = T1 / (T1/N + T0)
+    assert ol.speedup(1.0, 10, 0.0) == pytest.approx(10.0)
+    assert ol.speedup(1.0, 10, 0.1) == pytest.approx(1.0 / 0.2)
+
+
+def test_overhead_law_differs_from_amdahl():
+    # Amdahl with serial fraction s: S -> 1/s as N -> inf (finite).
+    # Overhead law: S -> T1/T0 as N -> inf — also finite but the paper's
+    # point is the *constant* overhead, paid only when parallel.
+    t1, t0 = 1.0, 0.01
+    s_inf = ol.speedup(t1, 10**9, t0)
+    assert s_inf == pytest.approx(t1 / t0, rel=1e-3)
+
+
+def test_parallel_fraction_eq4():
+    assert ol.parallel_fraction(19.0, 1.0) == pytest.approx(0.95)
+
+
+def test_t_opt_is_19_t0_at_95():
+    # the paper's headline constant
+    assert ol.t_opt(1e-5, 0.95) == pytest.approx(19e-5)
+
+
+def test_eq7_matches_eq8():
+    # N = (1-E)/E * T1/T0  ==  T1 / T_opt
+    t1, t0, eff = 0.123, 4.2e-6, 0.95
+    assert ol.optimal_cores(t1, t0, eff) == pytest.approx(
+        t1 / ol.t_opt(t0, eff))
+
+
+def test_efficiency_at_optimal_cores():
+    # running at exactly N from Eq. 7 yields exactly the target efficiency
+    t1, t0, eff = 1.0, 1e-4, 0.95
+    n = ol.optimal_cores(t1, t0, eff)
+    assert ol.efficiency(t1, n, t0) == pytest.approx(eff, rel=1e-6)
+
+
+def test_chunk_size_eq10():
+    assert ol.chunk_size(1_000_000, 40, 8) == math.ceil(1_000_000 / 320)
+    assert ol.chunk_size(10, 40, 8) == 1
+
+
+def test_decide_small_workload_sequential():
+    d = ol.decide(t_iter=1e-9, n_elements=100, t0=1e-5, max_cores=40)
+    assert d.n_cores == 1 and not d.parallel
+    assert d.chunk_elems == 100
+
+
+def test_decide_large_workload_all_cores():
+    d = ol.decide(t_iter=1e-8, n_elements=10_000_000, t0=1e-5, max_cores=40)
+    assert d.n_cores == 40
+    assert d.n_chunks >= 8 * 40 * 0.9  # ~C chunks per core
+    assert d.predicted_efficiency > 0.95
+
+
+def test_decide_clamps_to_max_cores():
+    d = ol.decide(t_iter=1.0, n_elements=10**6, t0=1e-6, max_cores=8)
+    assert d.n_cores == 8
+    assert d.n_cores_unclamped > 8
+
+
+def test_decide_chunk_floor_t_m():
+    # chunks must carry at least T_m = T_opt / C of work
+    t0, eff, c = 1e-4, 0.95, 8
+    d = ol.decide(t_iter=1e-7, n_elements=10**6, t0=t0, max_cores=1000,
+                  eff=eff, chunks_per_core=c)
+    t_m = ol.t_opt(t0, eff) / c
+    if d.n_chunks > 1:
+        assert d.chunk_elems * d.t_iter >= t_m * 0.999
+
+
+def test_decide_validates_inputs():
+    with pytest.raises(ValueError):
+        ol.decide(t_iter=1e-9, n_elements=0, t0=1e-5, max_cores=4)
+    with pytest.raises(ValueError):
+        ol.t_opt(1e-5, 1.5)

@@ -1,0 +1,140 @@
+"""Validation of the paper's experimental claims against the calibrated
+machine model (EXPERIMENTS.md §Paper-validation).
+
+The container has 1 CPU core, so Figures 1-4 (40-core Skylake / 48-core
+EPYC wall-clock) are reproduced on the calibrated SimMachine; the claims
+tested here are the paper's qualitative + quantitative statements.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ADJACENT_DIFFERENCE, EPYC_48, INTEL_SKYLAKE_40C,
+                        SKYLAKE_40, AdaptiveCoreChunk, artificial_work,
+                        t_iter_analytic)
+from repro.core import overhead_law as ol
+
+from repro.core import AMD_EPYC_48C
+
+SIZES = [2 ** k for k in range(10, 25, 2)]
+T_ITER_MEM = t_iter_analytic(ADJACENT_DIFFERENCE, INTEL_SKYLAKE_40C)
+T_ITER_CPU = t_iter_analytic(artificial_work(2048), INTEL_SKYLAKE_40C)
+MEM_SAT = 10  # cores that saturate socket bandwidth (≈10x cap, Fig 2)
+
+
+def acc_speedup(m, t_iter, n, sat=None):
+    # acc calibrates T0 with the empty-task benchmark at full width
+    d = ol.decide(t_iter=t_iter, n_elements=n, t0=m.t0_for(m.cores),
+                  max_cores=m.cores)
+    return (t_iter * n) / m.run_decision(d, saturation_cores=sat)
+
+
+def static_speedup(m, t_iter, n, cores, c=4, sat=None):
+    return m.speedup(t_iter=t_iter, count=n, n_cores=cores,
+                     chunks_per_core=c, saturation_cores=sat)
+
+
+def test_claim_small_inputs_prefer_fewer_cores():
+    """Fig 2: for small arrays, fewer cores win; for large, more win."""
+    m = SKYLAKE_40
+    small, large = 2 ** 10, 2 ** 24
+    s_small_2 = static_speedup(m, T_ITER_MEM, small, 2, sat=MEM_SAT)
+    s_small_40 = static_speedup(m, T_ITER_MEM, small, 40, sat=MEM_SAT)
+    assert s_small_2 > s_small_40
+    s_large_2 = static_speedup(m, T_ITER_MEM, large, 2, sat=MEM_SAT)
+    s_large_40 = static_speedup(m, T_ITER_MEM, large, 40, sat=MEM_SAT)
+    assert s_large_40 > s_large_2
+
+
+def test_claim_acc_improves_overall_and_tracks_envelope_at_scale():
+    """Section 6 claim (1), stated as the figures support it:
+    (a) acc is never slower than sequential at ANY size (statics with
+        many cores tank at small sizes — the slowdowns acc avoids),
+    (b) acc matches/beats the best static config at scale,
+    (c) every fixed parallel config has a catastrophic region (worst-case
+        ratio vs acc < 0.9 somewhere) — only acc is safe everywhere.
+    The conservative crossover region (Eq. 7 with the single full-width
+    T0) is documented in EXPERIMENTS.md §Paper-validation."""
+    m = SKYLAKE_40
+    accs, statics = [], {c: [] for c in (2, 4, 8, 16, 32, 40)}
+    for n in SIZES:
+        sa = acc_speedup(m, T_ITER_MEM, n, sat=MEM_SAT)
+        assert sa >= 0.999, (n, sa)                      # (a)
+        accs.append(sa)
+        for c in statics:
+            statics[c].append(static_speedup(m, T_ITER_MEM, n, c,
+                                             sat=MEM_SAT))
+    best_at_scale = max(s[-1] for s in statics.values())
+    assert accs[-1] >= best_at_scale * 0.95              # (b)
+    for c, vals in statics.items():                      # (c)
+        worst = min(v / a for v, a in zip(vals, accs))
+        assert worst < 0.9, (c, worst)
+
+
+def test_claim_c8_best_chunking_under_noise():
+    """Fig 1: C=8 chunks/core beats C=1 and C=4 for large inputs (load
+    balancing under jitter), and excessive chunking hurts."""
+    m = SKYLAKE_40
+    n = 2 ** 24
+    s = {c: m.speedup(t_iter=T_ITER_MEM, count=n, n_cores=40,
+                      chunks_per_core=c, saturation_cores=MEM_SAT)
+         for c in (1, 4, 8)}
+    assert s[8] >= s[1]
+    assert s[8] >= s[4] * 0.98
+    # excessive chunking: per-task overhead dominates once chunks shrink
+    # to O(t_task) of work (visible at smaller inputs, paper Section 5)
+    n_small = 2 ** 18
+    s8 = m.speedup(t_iter=T_ITER_MEM, count=n_small, n_cores=40,
+                   chunks_per_core=8, saturation_cores=MEM_SAT)
+    s512 = m.speedup(t_iter=T_ITER_MEM, count=n_small, n_cores=40,
+                     chunks_per_core=512, saturation_cores=MEM_SAT)
+    assert s8 > s512
+
+
+def test_claim_compute_bound_parallelizes_earlier():
+    """Figs 3/4 vs Fig 2: the compute-bound body starts benefiting from
+    parallelism at smaller inputs than the memory-bound one."""
+    m = SKYLAKE_40
+
+    def crossover(t_iter, sat=None):
+        for n in sorted(SIZES):
+            if acc_speedup(m, t_iter, n, sat=sat) > 1.5:
+                return n
+        return SIZES[-1] * 2
+
+    assert crossover(T_ITER_CPU) < crossover(T_ITER_MEM, sat=MEM_SAT)
+
+
+def test_claim_compute_bound_speedup_magnitudes():
+    """~38x on 40 cores (Intel) and ~46x on 48 (AMD) for compute-bound;
+    memory-bound saturates far lower (~10x reported)."""
+    n = 2 ** 24
+    s_intel = acc_speedup(SKYLAKE_40, T_ITER_CPU, n)
+    assert 30 <= s_intel <= 40          # paper: up to 38x on 40 cores
+    s_amd = acc_speedup(EPYC_48, t_iter_analytic(artificial_work(2048),
+                                                 AMD_EPYC_48C), n)
+    assert 36 <= s_amd <= 48            # paper: up to 46x on 48 cores
+    # memory-bound saturates the socket bandwidth: paper reports ~10x.
+    s_mem = acc_speedup(SKYLAKE_40, T_ITER_MEM, n, sat=MEM_SAT)
+    assert 8 <= s_mem <= 12
+    assert s_mem < s_intel
+
+
+def test_claim_acc_avoids_small_workload_slowdown():
+    """Section 5: "not only will this avoid slowdowns when loops are too
+    small or quick to benefit from parallelism"."""
+    m = SKYLAKE_40
+    n = 256
+    t1 = T_ITER_MEM * n
+    assert acc_speedup(m, T_ITER_MEM, n) >= 0.999  # never slower than seq
+    assert static_speedup(m, T_ITER_MEM, n, 40) < 0.5  # static-40 tanks
+
+
+def test_t0_measured_on_this_host_is_sane():
+    """The real (measured) empty-task benchmark on this container."""
+    from repro.core import HostParallelExecutor
+    from repro.core.calibration import measure_t0_empty_task
+
+    ex = HostParallelExecutor(max_workers=2)
+    t0 = measure_t0_empty_task(ex, repeats=8)
+    ex.shutdown()
+    assert 1e-7 < t0 < 5e-2  # dispatch overhead is real and finite
