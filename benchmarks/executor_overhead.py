@@ -1,0 +1,66 @@
+"""Executor-API dispatch-overhead microbenchmarks.
+
+Empty-task latency of each v2 execution function, per backend, plus the
+deprecated v1 sync path — so future PRs can detect regressions in the
+dispatch cost the Overhead Law's T0 ultimately pays for.  Rows follow the
+harness CSV convention: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+
+from repro.core import (HostParallelExecutor, SequentialExecutor, adaptive,
+                        make_chunks, when_all)
+
+N_CHUNKS = 16
+REPEATS = 200
+
+
+def _empty(_chunk) -> None:
+    return None
+
+
+def _per_call(fn, repeats: int = REPEATS) -> float:
+    fn()  # warm (pool threads, code paths)
+    start = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - start) / repeats
+
+
+def _bench_backend(name: str, ex) -> list[str]:
+    chunks = make_chunks(N_CHUNKS, 1)
+    rows = []
+    t = _per_call(lambda: ex.sync_execute(_empty, chunks[0]))
+    rows.append(f"exec/{name}/sync_execute,{t*1e6:.2f},empty_task")
+    t = _per_call(lambda: ex.async_execute(_empty, chunks[0]).result())
+    rows.append(f"exec/{name}/async_execute,{t*1e6:.2f},empty_task")
+    t = _per_call(
+        lambda: when_all(ex.bulk_async_execute(_empty, chunks)).result())
+    rows.append(f"exec/{name}/bulk_async_execute,{t*1e6:.2f},"
+                f"n_chunks={N_CHUNKS}")
+
+    def chain():
+        f = ex.async_execute(_empty, chunks[0])
+        for _ in range(4):
+            f = ex.then_execute(lambda _v: None, f)
+        return f.result()
+
+    t = _per_call(chain)
+    rows.append(f"exec/{name}/then_execute_chain4,{t*1e6:.2f},empty_task")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        t = _per_call(lambda: ex.bulk_sync_execute(_empty, chunks))
+    rows.append(f"exec/{name}/bulk_sync_execute(deprecated),{t*1e6:.2f},"
+                f"n_chunks={N_CHUNKS}")
+    return rows
+
+
+def bench_executor_overhead() -> list[str]:
+    rows = _bench_backend("seq", SequentialExecutor())
+    with HostParallelExecutor(max_workers=2) as host:
+        rows += _bench_backend("host2", host)
+        # The adaptive wrapper should add only delegation cost.
+        rows += _bench_backend("adaptive(host2)", adaptive(host))
+    return rows

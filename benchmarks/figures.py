@@ -93,9 +93,8 @@ def fig4_artificial_amd() -> list[str]:
 def table_t0_this_host() -> list[str]:
     """Measured T0 (empty-task benchmark) on THIS container — the paper's
     calibration step, executed for real."""
-    ex = HostParallelExecutor(max_workers=2)
-    t0 = measure_t0_empty_task(ex, repeats=16)
-    ex.shutdown()
+    with HostParallelExecutor(max_workers=2) as ex:
+        t0 = measure_t0_empty_task(ex, repeats=16)
     t_opt = ol.t_opt(t0, 0.95)
     return [f"t0/host,{t0*1e6:.2f},t_opt_us={t_opt*1e6:.2f};t_opt_eq_19t0="
             f"{abs(t_opt - 19*t0) < 1e-12}"]

@@ -16,9 +16,11 @@ def main() -> None:
                     help="model-based figures only (fast)")
     args = ap.parse_args()
 
-    from . import figures
+    from . import executor_overhead, figures
 
     suites = [
+        ("executor API v2 overhead (empty tasks)",
+         executor_overhead.bench_executor_overhead),
         ("fig1 (chunks/core sweep)", figures.fig1_chunks_per_core),
         ("fig2 (adjacent-difference, static vs acc)",
          figures.fig2_adjacent_difference),

@@ -53,25 +53,23 @@ def bench_kernels() -> list[str]:
 
 def bench_algorithms() -> list[str]:
     from repro import algorithms as alg
-    from repro.core import (AdaptiveCoreChunk, HostParallelExecutor, par,
-                            seq)
+    from repro.core import HostParallelExecutor, adaptive, par, seq
 
     rows = []
-    host = HostParallelExecutor(max_workers=2)
-    acc = AdaptiveCoreChunk()
     x = jnp.asarray(np.random.RandomState(0).randn(1 << 20)
                     .astype(np.float32))
-    for name, fn in [
-        ("adjacent_difference", alg.adjacent_difference),
-        ("inclusive_scan", alg.inclusive_scan),
-    ]:
-        t_seq = _time(lambda f=fn: f(seq, x))
-        pol = par.on(host).with_(acc)
-        t_acc = _time(lambda f=fn: f(pol, x))
-        rows.append(f"alg/{name}/seq,{t_seq*1e6:.1f},n=1M")
-        rows.append(f"alg/{name}/acc,{t_acc*1e6:.1f},"
-                    f"ratio={t_seq/max(t_acc,1e-12):.2f}")
-    host.shutdown()
+    with HostParallelExecutor(max_workers=2) as host:
+        # v2: the acc object rides on the executor, not the call site.
+        pol = par.on(adaptive(host))
+        for name, fn in [
+            ("adjacent_difference", alg.adjacent_difference),
+            ("inclusive_scan", alg.inclusive_scan),
+        ]:
+            t_seq = _time(lambda f=fn: f(seq, x))
+            t_acc = _time(lambda f=fn: f(pol, x))
+            rows.append(f"alg/{name}/seq,{t_seq*1e6:.1f},n=1M")
+            rows.append(f"alg/{name}/acc,{t_acc*1e6:.1f},"
+                        f"ratio={t_seq/max(t_acc,1e-12):.2f}")
     return rows
 
 

@@ -6,20 +6,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import algorithms as alg
-from repro.core import (AdaptiveCoreChunk, HostParallelExecutor, par, seq)
+from repro.core import (AdaptiveCoreChunk, HostParallelExecutor, adaptive,
+                        par, seq, when_all)
 
 # 1. A parallel algorithm with an execution policy — the C++17 API shape.
 x = jnp.asarray(np.random.rand(1_000_000).astype(np.float32))
 d_seq = alg.adjacent_difference(seq, x)
 
-# 2. Bind the adaptive_core_chunk_size (acc) execution-parameters object:
-#    measure_iteration / processing_units_count / get_chunk_size now run
-#    the paper's Overhead-Law model at the first invocation.
+# 2a. v2, one word: wrap any executor in adaptive() and the paper's
+#     Overhead-Law model (measure_iteration / processing_units_count /
+#     get_chunk_size) runs behind the executor — no extra arguments.
 host = HostParallelExecutor()
+d_v2 = alg.adjacent_difference(par.on(adaptive(host)), x)
+np.testing.assert_allclose(np.asarray(d_seq), np.asarray(d_v2), rtol=1e-5)
+
+# 2b. Equivalent spelled with an explicit execution-parameters object
+#     (.with_ is executor-property sugar: prefer(with_params, policy, acc)).
 acc = AdaptiveCoreChunk(efficiency=0.95, chunks_per_core=8)
 policy = par.on(host).with_(acc)
 d_acc = alg.adjacent_difference(policy, x)
 np.testing.assert_allclose(np.asarray(d_seq), np.asarray(d_acc), rtol=1e-5)
+
+# 2c. The executors themselves are asynchronous: futures + continuations.
+f = host.async_execute(lambda: float(x[0]))
+g = host.then_execute(lambda v: v * 2, f)
+outs = when_all(host.bulk_async_execute(
+    lambda c: float(x[c.start]), alg.detail.make_chunks(8, 2))).result()
+assert g.result() == float(x[0]) * 2 and len(outs) == 4
 
 # 3. Inspect the decision the model made for this workload.
 t_iter = acc.measure_iteration(
@@ -43,7 +56,7 @@ from repro.train.autotune import choose_plan
 
 cfg = get_config("qwen3-0.6b")
 plan = choose_plan(cfg, ShapeConfig("demo", 4096, 256, "train"),
-                   MeshExecutor(make_host_mesh()))
+                   adaptive(MeshExecutor(make_host_mesh())))
 print(f"\nLM autotune for {cfg.name} @ train_4k: "
       f"data_parallel={plan.data_parallel}, accum={plan.accum}, "
       f"microbatch={plan.microbatch} seqs")

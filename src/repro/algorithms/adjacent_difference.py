@@ -13,7 +13,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..core.executor import MeshExecutor
+from ..core.future import when_all
 from . import detail
 
 
@@ -32,12 +32,13 @@ def adjacent_difference(policy, x: jax.Array,
     if not p.parallel:
         return jf_whole(x)
 
-    if isinstance(p.executor, MeshExecutor):
+    mexec = detail.mesh_executor_of(p.executor)
+    if mexec is not None:
         def shard_fn(xl, left, idx):
             first = jnp.where(idx == 0, xl[:1], op(xl[:1], left))
             return jnp.concatenate([first, op(xl[1:], xl[:-1])])
 
-        return detail.mesh_map_with_left_halo(p.executor, p.cores, shard_fn, x)
+        return detail.mesh_map_with_left_halo(mexec, p.cores, shard_fn, x)
 
     # Host path: interior chunks read one halo element to their left.
     def interior(c_with_halo):
@@ -53,5 +54,6 @@ def adjacent_difference(policy, x: jax.Array,
         jax.block_until_ready(out)
         return out
 
-    outs = p.executor.bulk_sync_execute(thunk, p.chunks)
+    outs = when_all(
+        p.executor.bulk_async_execute(thunk, p.chunks)).result()
     return jnp.concatenate(outs, axis=0)

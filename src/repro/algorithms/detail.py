@@ -8,10 +8,15 @@ Every algorithm follows the paper's call sequence (Listing 1.1):
 
 then executes its chunks on the policy's executor.  Two execution paths:
 
-* host path — chunk thunks through the executor's thread pool (each thunk
-  is a jit-compiled slice computation; XLA releases the GIL);
+* host path — chunk thunks dispatched with ``bulk_async_execute`` and
+  joined with ``when_all`` (each thunk is a jit-compiled slice
+  computation; XLA releases the GIL);
 * mesh path — shard_map over an acc-sized sub-mesh (taken when the bound
-  executor is a ``MeshExecutor``).
+  executor is — or wraps — a ``MeshExecutor``; see ``mesh_executor_of``).
+
+Execution parameters resolve from the policy first, then from the
+executor's ``params`` annotation — that second step is what makes
+``par.on(adaptive(ex))`` equivalent to ``par.on(ex).with_(acc)``.
 """
 from __future__ import annotations
 
@@ -25,8 +30,16 @@ from jax.sharding import PartitionSpec as P
 
 from ..core import customization as cp
 from ..core.executor import (Chunk, MeshExecutor, SequentialExecutor,
-                             make_chunks)
+                             make_chunks, mesh_executor_of)
+from ..core.future import when_all
 from ..core.policy import ExecutionPolicy
+
+# jax.shard_map landed in 0.4.35 as experimental and moved to the top
+# level later; support both spellings.  Public: the algorithm modules (and
+# any out-of-tree mesh backend) should use this instead of jax.shard_map.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
 
 
 @dataclasses.dataclass
@@ -48,7 +61,7 @@ def plan(policy: ExecutionPolicy, count: int,
          key: Any = None) -> Plan:
     """Run the three customization points and build the chunk list."""
     executor = policy.resolve_executor()
-    params = policy.params
+    params = policy.resolve_params(executor)
     if not policy.allows_parallel or count <= 1:
         return Plan(SequentialExecutor(), params, 0.0, 1, max(count, 1),
                     make_chunks(count, max(count, 1)))
@@ -88,8 +101,8 @@ def run_map_chunks(plan_: Plan, jitted_chunk_fn: Callable,
         jax.block_until_ready(out)
         return out
 
-    outs = plan_.executor.bulk_sync_execute(thunk, plan_.chunks)
-    return jnp.concatenate(outs, axis=0)
+    futs = plan_.executor.bulk_async_execute(thunk, plan_.chunks)
+    return jnp.concatenate(when_all(futs).result(), axis=0)
 
 
 def run_reduce_chunks(plan_: Plan, jitted_partial_fn: Callable,
@@ -104,7 +117,8 @@ def run_reduce_chunks(plan_: Plan, jitted_partial_fn: Callable,
         jax.block_until_ready(out)
         return out
 
-    partials = plan_.executor.bulk_sync_execute(thunk, plan_.chunks)
+    partials = when_all(
+        plan_.executor.bulk_async_execute(thunk, plan_.chunks)).result()
     acc = partials[0]
     for p in partials[1:]:
         acc = combine(acc, p)
@@ -136,8 +150,8 @@ def mesh_map(mexec: MeshExecutor, cores: int, shard_fn: Callable,
     """Elementwise map via shard_map over an acc-chosen sub-mesh."""
     mesh = submesh_1d(mexec, cores)
     xp, n = pad_to(x, cores, fill)
-    f = jax.jit(jax.shard_map(shard_fn, mesh=mesh,
-                              in_specs=P("data"), out_specs=P("data")))
+    f = jax.jit(shard_map(shard_fn, mesh=mesh,
+                          in_specs=P("data"), out_specs=P("data")))
     return f(xp)[:n]
 
 
@@ -157,8 +171,8 @@ def mesh_map_with_left_halo(mexec: MeshExecutor, cores: int,
             last, "data", [(i, (i + 1) % cores) for i in range(cores)])
         return shard_fn(xl, left, idx)
 
-    f = jax.jit(jax.shard_map(wrapper, mesh=mesh,
-                              in_specs=P("data"), out_specs=P("data")))
+    f = jax.jit(shard_map(wrapper, mesh=mesh,
+                          in_specs=P("data"), out_specs=P("data")))
     return f(xp)[:n]
 
 
@@ -179,8 +193,8 @@ def mesh_scan(mexec: MeshExecutor, cores: int, x: jax.Array,
         offset = local_total(jnp.where(mask, totals, identity))
         return apply_offset(scanned, offset)
 
-    f = jax.jit(jax.shard_map(wrapper, mesh=mesh,
-                              in_specs=P("data"), out_specs=P("data")))
+    f = jax.jit(shard_map(wrapper, mesh=mesh,
+                          in_specs=P("data"), out_specs=P("data")))
     return f(xp)[:n]
 
 
@@ -196,6 +210,6 @@ def mesh_reduce(mexec: MeshExecutor, cores: int, x: jax.Array,
         p = local_partial(xl)
         return jnp.reshape(p, (1,) + p.shape)
 
-    f = jax.jit(jax.shard_map(wrapper, mesh=mesh,
-                              in_specs=P("data"), out_specs=P("data")))
+    f = jax.jit(shard_map(wrapper, mesh=mesh,
+                          in_specs=P("data"), out_specs=P("data")))
     return f(xp)

@@ -3,7 +3,8 @@
 These are the algorithms the paper classifies as "map-type" (Section 1).
 Each takes an execution policy first, mirroring the C++ API:
 
-    transform(par.on(HostParallelExecutor()).with_(acc), x, fn)
+    transform(par.on(adaptive(HostParallelExecutor())), x, fn)
+    transform(par.on(HostParallelExecutor()).with_(acc), x, fn)   # equivalent
 """
 from __future__ import annotations
 
@@ -12,7 +13,6 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..core.executor import MeshExecutor
 from . import detail
 
 
@@ -28,17 +28,19 @@ def transform(policy, x: jax.Array, fn: Callable,
     count = x.shape[0]
     body = detail.measured_body(jf, *arrays)
     p = detail.plan(policy, count, body, key=_chunk_key(fn, x, "transform"))
-    if isinstance(p.executor, MeshExecutor) and p.parallel:
+    mexec = detail.mesh_executor_of(p.executor)
+    if mexec is not None and p.parallel:
         if y is None:
-            return detail.mesh_map(p.executor, p.cores, jf, x)
+            return detail.mesh_map(mexec, p.cores, jf, x)
         # binary: zip shards by stacking then splitting inside the shard
-        mesh = detail.submesh_1d(p.executor, p.cores)
+        mesh = detail.submesh_1d(mexec, p.cores)
         from jax.sharding import PartitionSpec as P
 
         xp, n = detail.pad_to(x, p.cores)
         yp, _ = detail.pad_to(y, p.cores)
-        f = jax.jit(jax.shard_map(jf, mesh=mesh, in_specs=(P("data"), P("data")),
-                                  out_specs=P("data")))
+        f = jax.jit(detail.shard_map(
+            jf, mesh=mesh, in_specs=(P("data"), P("data")),
+            out_specs=P("data")))
         return f(xp, yp)[:n]
     return detail.run_map_chunks(p, jf, *arrays)
 

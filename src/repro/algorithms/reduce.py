@@ -7,7 +7,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..core.executor import MeshExecutor
+from ..core.future import when_all
 from . import detail
 
 
@@ -26,8 +26,9 @@ def reduce(policy, x: jax.Array, op: Callable = jnp.add, init=None):
 
     jf = jax.jit(partial)
     p = _plan_for(policy, x, jf, "reduce")
-    if isinstance(p.executor, MeshExecutor) and p.parallel:
-        parts = detail.mesh_reduce(p.executor, p.cores, x, jf,
+    mexec = detail.mesh_executor_of(p.executor)
+    if mexec is not None and p.parallel:
+        parts = detail.mesh_reduce(mexec, p.cores, x, jf,
                                    identity.astype(x.dtype))
         return jax.lax.reduce(parts, identity.astype(x.dtype), op, (0,))
     out = detail.run_reduce_chunks(p, jf, op, x)
@@ -66,8 +67,9 @@ def transform_reduce(policy, x: jax.Array, transform_fn: Callable,
 
     jf = jax.jit(partial)
     p = _plan_for(policy, x, jf, ("transform_reduce", id(transform_fn)))
-    if isinstance(p.executor, MeshExecutor) and p.parallel:
-        parts = detail.mesh_reduce(p.executor, p.cores, x, jf, identity)
+    mexec = detail.mesh_executor_of(p.executor)
+    if mexec is not None and p.parallel:
+        parts = detail.mesh_reduce(mexec, p.cores, x, jf, identity)
         return jax.lax.reduce(parts, identity.astype(parts.dtype), op, (0,))
     return detail.run_reduce_chunks(p, jf, op, x)
 
@@ -107,7 +109,8 @@ def _arg_extreme(policy, x: jax.Array, is_min: bool):
         jax.block_until_ready(v)
         return v, i + c.start
 
-    partials = p.executor.bulk_sync_execute(thunk, p.chunks)
+    partials = when_all(
+        p.executor.bulk_async_execute(thunk, p.chunks)).result()
     vals = jnp.stack([v for v, _ in partials])
     idxs = jnp.stack([i for _, i in partials])
     sel = jnp.argmin(vals) if is_min else jnp.argmax(vals)

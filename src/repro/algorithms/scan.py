@@ -15,7 +15,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..core.executor import MeshExecutor
+from ..core.future import when_all
 from . import detail
 
 
@@ -33,10 +33,11 @@ def inclusive_scan(policy, x: jax.Array, op: Callable = jnp.add) -> jax.Array:
     if not p.parallel:
         return local(x)
 
-    if isinstance(p.executor, MeshExecutor):
+    mexec = detail.mesh_executor_of(p.executor)
+    if mexec is not None:
         identity = _scan_identity(op, x.dtype)
         return detail.mesh_scan(
-            p.executor, p.cores, x,
+            mexec, p.cores, x,
             local_scan=lambda c: _assoc_scan(op, c),
             local_total=lambda c: jax.lax.reduce(
                 c, identity.astype(c.dtype), op, (0,)),
@@ -49,7 +50,8 @@ def inclusive_scan(policy, x: jax.Array, op: Callable = jnp.add) -> jax.Array:
         jax.block_until_ready(out)
         return out
 
-    scanned = p.executor.bulk_sync_execute(thunk, p.chunks)
+    scanned = when_all(
+        p.executor.bulk_async_execute(thunk, p.chunks)).result()
     # Phase 2: serial exclusive scan of totals
     offsets = []
     carry = None
@@ -61,8 +63,8 @@ def inclusive_scan(policy, x: jax.Array, op: Callable = jnp.add) -> jax.Array:
         i, off = args
         return scanned[i] if off is None else combine(scanned[i], off)
 
-    outs = p.executor.bulk_sync_execute(
-        apply, list(enumerate(offsets)))
+    outs = when_all(p.executor.bulk_async_execute(
+        apply, list(enumerate(offsets)))).result()
     return jnp.concatenate(outs, axis=0)
 
 

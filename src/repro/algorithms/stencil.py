@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.executor import MeshExecutor
+from ..core.future import when_all
 from . import detail
 
 
@@ -34,7 +34,8 @@ def stencil3(policy, x: jax.Array, a: float = 1.0, b: float = -2.0,
     if not p.parallel:
         return jf_whole(x)
 
-    if isinstance(p.executor, MeshExecutor):
+    mexec = detail.mesh_executor_of(p.executor)
+    if mexec is not None:
         cores = p.cores
 
         def shard_fn(xl):
@@ -45,7 +46,7 @@ def stencil3(policy, x: jax.Array, a: float = 1.0, b: float = -2.0,
             ext = jnp.concatenate([from_left, xl, from_right])
             return _stencil_once(ext, a, b, c)[1:-1]
 
-        out = detail.mesh_map(p.executor, p.cores, shard_fn, x)
+        out = detail.mesh_map(mexec, p.cores, shard_fn, x)
         # True array boundaries are copied through (the wraparound halos at
         # the outermost shards and any tail padding are overwritten here).
         return out.at[0].set(x[0]).at[-1].set(x[-1])
@@ -62,7 +63,8 @@ def stencil3(policy, x: jax.Array, a: float = 1.0, b: float = -2.0,
         jax.block_until_ready(out)
         return out
 
-    outs = p.executor.bulk_sync_execute(thunk, p.chunks)
+    outs = when_all(
+        p.executor.bulk_async_execute(thunk, p.chunks)).result()
     return jnp.concatenate(outs, axis=0)
 
 

@@ -6,30 +6,45 @@ Public surface:
   - customization points: measure_iteration, processing_units_count,
     get_chunk_size (tag_invoke-style dispatch)
   - policies: seq, par, unseq, par_unseq
-  - executors: SequentialExecutor, HostParallelExecutor, MeshExecutor
+  - executors (v2 async API): SequentialExecutor, HostParallelExecutor,
+    MeshExecutor, AdaptiveExecutor / adaptive(); Future, when_all
+  - executor properties: prefer/require, with_priority/with_hint/with_params
   - hardware specs + analytic cost model + SimMachine
 """
-from . import calibration, cost_model, customization, overhead_law
+from . import calibration, cost_model, customization, overhead_law, properties
 from .acc import AdaptiveCoreChunk, StaticCoreChunk
+from .adaptive import AdaptiveExecutor, adaptive
 from .cost_model import (ADJACENT_DIFFERENCE, WorkloadProfile,
                          artificial_work, t0_analytic, t_iter_analytic)
 from .customization import (get_chunk_size, measure_iteration,
                             processing_units_count)
-from .executor import (Chunk, Executor, HostParallelExecutor, MeshExecutor,
-                       SequentialExecutor, make_chunks)
+from .executor import (Chunk, Executor, ExecutorBase, HostParallelExecutor,
+                       MeshExecutor, SequentialExecutor, UnsupportedOperation,
+                       make_chunks, mesh_executor_of, unwrap_executor)
+from .future import Future, when_all
 from .hardware import (AMD_EPYC_48C, INTEL_SKYLAKE_40C, TPU_V5E,
                        HardwareSpec, this_host)
 from .overhead_law import AccDecision, decide
 from .policy import ExecutionPolicy, par, par_unseq, seq, unseq
+from .properties import (ExecutorAnnotations, ExecutorProperty,
+                         UnsupportedProperty, params_of, prefer, require,
+                         with_hint, with_params, with_priority)
 from .simmachine import EPYC_48, SKYLAKE_40, SimMachine
 
 __all__ = [
     "overhead_law", "customization", "calibration", "cost_model",
+    "properties",
     "AdaptiveCoreChunk", "StaticCoreChunk", "AccDecision", "decide",
     "measure_iteration", "processing_units_count", "get_chunk_size",
     "ExecutionPolicy", "seq", "par", "unseq", "par_unseq",
-    "Chunk", "Executor", "SequentialExecutor", "HostParallelExecutor",
-    "MeshExecutor", "make_chunks",
+    "Chunk", "Executor", "ExecutorBase", "SequentialExecutor",
+    "HostParallelExecutor", "MeshExecutor", "AdaptiveExecutor", "adaptive",
+    "UnsupportedOperation", "make_chunks", "unwrap_executor",
+    "mesh_executor_of",
+    "Future", "when_all",
+    "ExecutorAnnotations", "ExecutorProperty", "UnsupportedProperty",
+    "prefer", "require", "params_of",
+    "with_priority", "with_hint", "with_params",
     "HardwareSpec", "TPU_V5E", "INTEL_SKYLAKE_40C", "AMD_EPYC_48C",
     "this_host", "WorkloadProfile", "ADJACENT_DIFFERENCE",
     "artificial_work", "t_iter_analytic", "t0_analytic",

@@ -21,7 +21,7 @@ from typing import Any, Callable, Hashable
 
 from . import calibration, overhead_law
 from .cost_model import WorkloadProfile, t0_analytic, t_iter_analytic
-from .executor import Executor, MeshExecutor
+from .executor import Executor, mesh_executor_of
 from .hardware import TPU_V5E, HardwareSpec
 
 
@@ -40,7 +40,7 @@ class AdaptiveCoreChunk:
     def calibrate_t0(self, executor: Executor) -> float:
         if self.t0_override is not None:
             return self.t0_override
-        if isinstance(executor, MeshExecutor):
+        if mesh_executor_of(executor) is not None:
             return t0_analytic(self.hardware, executor.num_units())
         key = ("t0", id(executor))
         return self.cache.t0(
@@ -87,9 +87,10 @@ class AdaptiveCoreChunk:
         d = overhead_law.decide(
             t_iter=t_iter, n_elements=count, t0=t0, max_cores=max_cores,
             eff=self.efficiency, chunks_per_core=self.chunks_per_core)
-        if isinstance(executor, MeshExecutor) and d.n_cores > 1:
+        mexec = mesh_executor_of(executor)
+        if mexec is not None and d.n_cores > 1:
             # Mesh shardings need a divisor of the data extent.
-            cores = executor.submesh_size(d.n_cores)
+            cores = mexec.submesh_size(d.n_cores)
             if cores != d.n_cores:
                 chunk = overhead_law.chunk_size(count, cores, self.chunks_per_core)
                 d = dataclasses.replace(

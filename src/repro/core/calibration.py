@@ -16,6 +16,7 @@ import time
 from typing import Any, Callable, Hashable
 
 from .executor import Chunk, Executor, make_chunks
+from .future import when_all
 
 
 class CalibrationCache:
@@ -52,10 +53,10 @@ def measure_t0_empty_task(executor: Executor, repeats: int = 32) -> float:
 
     chunks = make_chunks(max(executor.num_units(), 2), 1)
     # Warm the pool (thread creation is a one-time cost, not T0).
-    executor.bulk_sync_execute(empty, chunks)
+    when_all(executor.bulk_async_execute(empty, chunks)).result()
     start = time.perf_counter()
     for _ in range(repeats):
-        executor.bulk_sync_execute(empty, chunks)
+        when_all(executor.bulk_async_execute(empty, chunks)).result()
     return (time.perf_counter() - start) / repeats
 
 

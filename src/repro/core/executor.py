@@ -1,26 +1,51 @@
-"""Executors: where chunks actually run.
+"""Executors: where chunks actually run (v2, HPX-faithful surface).
 
-Three backends share one protocol:
+Three backends share one protocol of four *execution functions*, mirroring
+``hpx::parallel::execution``:
 
-* ``SequentialExecutor``  — in-order, no parallel overhead (``seq`` policy).
+* ``sync_execute(fn, *args)``          — run one task, return its value;
+* ``async_execute(fn, *args)``         — run one task, return a ``Future``;
+* ``bulk_async_execute(fn, chunks)``   — one task per chunk, list of futures;
+* ``then_execute(fn, future)``         — continuation: run ``fn`` on the
+  future's value through this executor, return the chained future.
+
+``bulk_sync_execute`` survives only as a deprecated shim (join of
+``bulk_async_execute`` via ``when_all``); it warns once per executor
+instance and will be removed.
+
+Backends:
+
+* ``SequentialExecutor``  — in-order, inline, no parallel overhead.
 * ``HostParallelExecutor``— a thread pool over jit-compiled chunk thunks.
   XLA releases the GIL during computation, so on a multi-core host this is
   genuine parallelism; it is the faithful analogue of HPX's thread pool and
-  the backend used for the paper-figure wall-clock benchmarks.
+  the backend used for the paper-figure wall-clock benchmarks.  Supports
+  ``with`` for deterministic pool shutdown.
 * ``MeshExecutor``        — a JAX device mesh.  It does not run Python
-  thunks per chunk; instead it carries the mesh and exposes the unit count
-  and sub-mesh selection used by the shard_map-based algorithm backend and
-  the training/serving loops.
+  thunks per chunk (that would serialize an SPMD program); bulk execution
+  raises ``UnsupportedOperation`` pointing at the shard_map backend in
+  algorithms/detail.py.  It carries the mesh and exposes the unit count and
+  sub-mesh selection used by that backend and the training/serving loops.
 
 Executors may overload customization points simply by defining methods of
-the same name (see core/customization.py); none of these defaults do, so
-all adaptivity lives in the execution-parameters objects (core/acc.py).
+the same name (see core/customization.py); ``AdaptiveExecutor``
+(core/adaptive.py) is the executor that does.  Properties/annotations
+(``with_priority`` / ``with_hint`` / ``with_params``) come from the
+``PropertySupport`` mixin (core/properties.py).
 """
 from __future__ import annotations
 
 import concurrent.futures as _cf
 import dataclasses
+import warnings
 from typing import Any, Callable, Protocol, Sequence, runtime_checkable
+
+from .future import Future, when_all
+from .properties import PropertySupport
+
+
+class UnsupportedOperation(RuntimeError):
+    """An execution function this executor cannot meaningfully provide."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,28 +71,72 @@ def make_chunks(count: int, chunk_elems: int) -> list[Chunk]:
 class Executor(Protocol):
     def num_units(self) -> int: ...
 
-    def bulk_sync_execute(
+    def sync_execute(self, fn: Callable[..., Any], *args: Any) -> Any: ...
+
+    def async_execute(self, fn: Callable[..., Any], *args: Any) -> Future: ...
+
+    def bulk_async_execute(
         self, fn: Callable[[Chunk], Any], chunks: Sequence[Chunk]
-    ) -> list[Any]: ...
+    ) -> list[Future]: ...
+
+    def then_execute(
+        self, fn: Callable[[Any], Any], future: Future
+    ) -> Future: ...
 
 
-class SequentialExecutor:
-    """Runs every chunk in order on the calling thread."""
+class ExecutorBase:
+    """Default execution functions, all derived from ``async_execute``
+    (inline, on the calling thread).  Backends override the primitives
+    they can do better — exactly HPX's executor-customization design."""
+
+    def sync_execute(self, fn: Callable[..., Any], *args: Any) -> Any:
+        return self.async_execute(fn, *args).result()
+
+    def async_execute(self, fn: Callable[..., Any], *args: Any) -> Future:
+        return Future.from_call(fn, *args)
+
+    def bulk_async_execute(self, fn, chunks) -> list[Future]:
+        return [self.async_execute(fn, c) for c in chunks]
+
+    def then_execute(self, fn: Callable[[Any], Any], future: Future) -> Future:
+        return future.then(fn, executor=self)
+
+    # -- deprecated v1 surface ---------------------------------------------
+    _bulk_sync_warned = False
+
+    def bulk_sync_execute(self, fn, chunks):
+        if not self._bulk_sync_warned:
+            self._bulk_sync_warned = True
+            warnings.warn(
+                "bulk_sync_execute is deprecated; use "
+                "when_all(executor.bulk_async_execute(fn, chunks)).result()",
+                DeprecationWarning, stacklevel=2)
+        return when_all(self.bulk_async_execute(fn, chunks)).result()
+
+
+class SequentialExecutor(ExecutorBase, PropertySupport):
+    """Runs every task in order on the calling thread; futures come back
+    already resolved (``seq`` policy)."""
 
     def num_units(self) -> int:
         return 1
 
-    def bulk_sync_execute(self, fn, chunks):
-        return [fn(c) for c in chunks]
 
-
-class HostParallelExecutor:
+class HostParallelExecutor(ExecutorBase, PropertySupport):
     """Thread pool over chunk thunks (HPX thread-pool analogue).
 
     ``max_workers`` bounds the pool; the *effective* unit count for a given
-    workload is decided by the execution-parameters object (e.g. acc) and
-    passed per-call via ``bulk_sync_execute``'s implicit chunk count — the
-    pool never runs more chunks concurrently than it has workers.
+    workload is decided by the execution-parameters object (e.g. acc) via
+    the chunk count of each bulk call — the pool never runs more chunks
+    concurrently than it has workers.
+
+    Use as a context manager for deterministic pool shutdown::
+
+        with HostParallelExecutor(max_workers=4) as ex:
+            futs = ex.bulk_async_execute(thunk, chunks)
+            outs = when_all(futs).result()
+
+    ``__del__`` remains as a best-effort backstop only.
     """
 
     def __init__(self, max_workers: int | None = None):
@@ -75,6 +144,16 @@ class HostParallelExecutor:
 
         self._max_workers = max_workers or (os.cpu_count() or 1)
         self._pool: _cf.ThreadPoolExecutor | None = None
+        self._owns_pool = True
+
+    def __copy__(self) -> "HostParallelExecutor":
+        # Property annotation clones share the pool but must not tear it
+        # down when garbage-collected (only explicit shutdown/__exit__ or
+        # the owning instance's __del__ may).
+        clone = type(self).__new__(type(self))
+        clone.__dict__.update(self.__dict__)
+        clone._owns_pool = False
+        return clone
 
     def num_units(self) -> int:
         return self._max_workers
@@ -82,33 +161,54 @@ class HostParallelExecutor:
     def _ensure_pool(self) -> _cf.ThreadPoolExecutor:
         if self._pool is None:
             self._pool = _cf.ThreadPoolExecutor(max_workers=self._max_workers)
+            self._owns_pool = True
         return self._pool
 
-    def bulk_sync_execute(self, fn, chunks):
+    def async_execute(self, fn, *args) -> Future:
+        return Future(self._ensure_pool().submit(fn, *args))
+
+    def bulk_async_execute(self, fn, chunks) -> list[Future]:
         if len(chunks) <= 1:
-            return [fn(c) for c in chunks]
+            # Degenerate bulk: inline, no dispatch overhead.
+            return [Future.from_call(fn, c) for c in chunks]
         pool = self._ensure_pool()
-        return list(pool.map(fn, chunks))
+        return [Future(pool.submit(fn, c)) for c in chunks]
 
     def shutdown(self) -> None:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
 
+    def __enter__(self) -> "HostParallelExecutor":
+        self._ensure_pool()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown()
+
     def __del__(self):  # pragma: no cover - best-effort cleanup
         try:
-            self.shutdown()
+            if getattr(self, "_owns_pool", True):
+                self.shutdown()
         except Exception:
             pass
 
 
-class MeshExecutor:
+class MeshExecutor(ExecutorBase, PropertySupport):
     """Executor view of a JAX device mesh.
 
     ``data_axes`` are the axes over which a data-parallel workload may be
     spread; ``num_units`` is their total extent.  ``submesh_size(n)`` maps
     an acc core-count decision onto a realisable device count (a divisor of
     the full extent, so shardings stay regular).
+
+    Bulk execution of Python thunks is *not* provided: running one thunk
+    per chunk on the driver would serialize what shard_map runs SPMD, which
+    is a silent performance bug, so ``bulk_async_execute`` /
+    ``bulk_sync_execute`` raise ``UnsupportedOperation``.  Single-task
+    ``sync_execute`` / ``async_execute`` / ``then_execute`` run inline on
+    the driver (they launch whole jitted SPMD programs, not per-chunk
+    work).
     """
 
     def __init__(self, mesh, data_axes: tuple[str, ...] = ("data",)):
@@ -130,7 +230,32 @@ class MeshExecutor:
                 return d
         return 1
 
+    def bulk_async_execute(self, fn, chunks):
+        raise UnsupportedOperation(
+            "MeshExecutor does not run per-chunk Python thunks (that would "
+            "serialize an SPMD program on the driver). Use the shard_map "
+            "backend: repro.algorithms.detail.mesh_map / mesh_reduce / "
+            "mesh_scan over an acc-sized sub-mesh.")
+
     def bulk_sync_execute(self, fn, chunks):
-        # Mesh execution happens inside jit/shard_map; running Python thunks
-        # per chunk would defeat SPMD.  Sequential fallback for generic use.
-        return [fn(c) for c in chunks]
+        # Deliberately not the deprecation shim: fail loudly either way.
+        self.bulk_async_execute(fn, chunks)
+
+
+def unwrap_executor(executor: Any) -> Any:
+    """Innermost executor of a wrapper chain (``inner`` attributes)."""
+    seen = set()
+    while id(executor) not in seen:
+        seen.add(id(executor))
+        inner = getattr(executor, "inner", None)
+        if inner is None:
+            return executor
+        executor = inner
+    return executor
+
+
+def mesh_executor_of(executor: Any) -> MeshExecutor | None:
+    """The ``MeshExecutor`` behind ``executor`` (itself or through
+    wrappers such as ``AdaptiveExecutor``), or None."""
+    ex = unwrap_executor(executor)
+    return ex if isinstance(ex, MeshExecutor) else None

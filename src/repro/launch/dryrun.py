@@ -25,6 +25,7 @@ from ..analysis import roofline
 from ..configs import ARCH_NAMES, SHAPES, get_config, get_shape, \
     shape_applicable
 from ..core.acc import AdaptiveCoreChunk
+from ..core.adaptive import adaptive
 from ..core.executor import MeshExecutor
 from ..models import lm
 from ..optim import adamw
@@ -201,7 +202,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         if shape.kind == "train":
             if accum is None:
                 if use_acc:
-                    mexec = MeshExecutor(mesh, data_axes=("pod", "data"))
+                    mexec = adaptive(
+                        MeshExecutor(mesh, data_axes=("pod", "data")))
                     plan = autotune.choose_plan(cfg, shape, mexec)
                     accum = plan.accum
                 else:

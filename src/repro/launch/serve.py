@@ -11,6 +11,8 @@ import time
 import jax
 
 from ..configs import ARCH_NAMES, get_config
+from ..core.adaptive import adaptive
+from ..core.executor import SequentialExecutor
 from ..data import make_batch
 from ..models import lm
 from ..serve import ServeEngine
@@ -33,7 +35,8 @@ def main() -> None:
     feats = batch.get("frontend_feats")
 
     engine = ServeEngine(cfg, params, batch=args.batch,
-                         max_len=args.prompt_len + args.new_tokens)
+                         max_len=args.prompt_len + args.new_tokens,
+                         executor=adaptive(SequentialExecutor()))
     t0 = time.time()
     out = engine.generate(batch["tokens"], args.new_tokens,
                           frontend_feats=feats)

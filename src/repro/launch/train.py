@@ -17,7 +17,7 @@ import time
 import jax
 
 from ..configs import ARCH_NAMES, get_config
-from ..core.acc import AdaptiveCoreChunk
+from ..core.adaptive import adaptive
 from ..core.executor import MeshExecutor
 from ..data import TokenPipeline, make_batch
 from ..models import lm
@@ -59,9 +59,9 @@ def main() -> None:
         from ..train.autotune import choose_plan
 
         mesh = mesh_lib.make_host_mesh()
-        mexec = MeshExecutor(mesh)
+        mexec = adaptive(MeshExecutor(mesh))   # acc rides on the executor
         shape = ShapeConfig("cli", args.seq, args.batch, "train")
-        plan = choose_plan(cfg, shape, mexec, AdaptiveCoreChunk())
+        plan = choose_plan(cfg, shape, mexec)
         accum = plan.accum
         print(f"acc plan: data_parallel={plan.data_parallel} accum={accum} "
               f"(N_C raw {plan.decision.n_cores_unclamped:.1f})")

@@ -19,6 +19,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core.acc import AdaptiveCoreChunk
+from ..core.adaptive import adaptive
 from ..core.cost_model import WorkloadProfile
 from ..core.executor import MeshExecutor
 
@@ -41,9 +42,8 @@ def elastic_plan(cfg_profile: WorkloadProfile, n_elements: int,
                  mesh: jax.sharding.Mesh,
                  acc: AdaptiveCoreChunk | None = None):
     """acc decision over the surviving mesh (Eq. 7 as the scaling rule)."""
-    acc = acc or AdaptiveCoreChunk()
-    mexec = MeshExecutor(mesh, data_axes=("data",))
-    return acc.decide_for_profile(mexec, cfg_profile, n_elements)
+    mexec = adaptive(MeshExecutor(mesh, data_axes=("data",)), acc)
+    return mexec.params.decide_for_profile(mexec, cfg_profile, n_elements)
 
 
 def reshard(tree: Any, mesh: jax.sharding.Mesh, spec_tree: Any = None) -> Any:

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..core.acc import AdaptiveCoreChunk
+from ..core.executor import SequentialExecutor
+from ..core.future import Future
+from ..core.properties import params_of
 from ..models import lm
 
 
@@ -53,42 +56,68 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, batch: int, max_len: int,
                  window: int | None = None,
-                 acc: AdaptiveCoreChunk | None = None):
+                 acc: AdaptiveCoreChunk | None = None,
+                 executor=None):
         self.cfg = cfg
         self.params = params
         self.window = window if window is not None else cfg.attn_window
         self.max_len = max_len
         self.caches = lm.init_caches(cfg, batch, max_len, window=self.window)
         self.pos = 0
-        self.acc = acc or AdaptiveCoreChunk()
+        # v2: an AdaptiveExecutor carries the acc object; an explicit
+        # ``acc=`` argument still wins for backwards compatibility.
+        self.executor = executor if executor is not None \
+            else SequentialExecutor()
+        self.acc = acc or params_of(self.executor) or AdaptiveCoreChunk()
         self._decode = jax.jit(make_decode_step(cfg, window=self.window))
 
-    def prefill(self, tokens: jax.Array, frontend_feats=None,
-                chunk: int | None = None) -> jax.Array:
-        """Chunked prefill; chunk size from the acc model unless given."""
-        bsz, s = tokens.shape
-        if chunk is None:
-            from ..core.executor import SequentialExecutor
-            from ..train.autotune import token_profile
-
-            d = self.acc.decide_for_profile(
-                SequentialExecutor(), token_profile(self.cfg, training=False),
-                s)
-            chunk = max(min(d.chunk_elems, s), 1)
-        logits = None
-        start = 0
+    def _prefill_segments(self, s: int, chunk: int) -> list[tuple[int, int]]:
+        """(start, step) prefill pieces; ring-buffer writes must not cross
+        the window boundary, so steps depend on the evolving position."""
+        segs = []
+        start, pos = 0, self.pos
         while start < s:
             step = min(chunk, s - start)
             if self.window:
-                # a ring-buffer write must not cross the ring boundary
-                step = min(step, self.window,
-                           self.window - self.pos % self.window)
-            piece = tokens[:, start:start + step]
-            logits, self.caches = lm.forward_cached(
-                self.params, piece, self.caches, self.pos, self.cfg,
-                window=self.window, frontend_feats=frontend_feats)
-            self.pos += step
+                step = min(step, self.window, self.window - pos % self.window)
+            segs.append((start, step))
+            pos += step
             start += step
+        return segs
+
+    def prefill(self, tokens: jax.Array, frontend_feats=None,
+                chunk: int | None = None) -> jax.Array:
+        """Chunked prefill; chunk size from the acc model unless given.
+
+        The per-chunk forward passes are chained through the executor with
+        ``then_execute`` — each continuation consumes the previous chunk's
+        (logits, caches, position) state, so the whole prefill is one
+        future chain joined only at the end.
+        """
+        bsz, s = tokens.shape
+        if chunk is None:
+            from ..train.autotune import token_profile
+
+            d = self.acc.decide_for_profile(
+                self.executor, token_profile(self.cfg, training=False), s)
+            chunk = max(min(d.chunk_elems, s), 1)
+
+        def step_for(start: int, step: int):
+            piece = tokens[:, start:start + step]
+
+            def run(state):
+                _, caches, pos = state
+                logits, caches = lm.forward_cached(
+                    self.params, piece, caches, pos, self.cfg,
+                    window=self.window, frontend_feats=frontend_feats)
+                return logits, caches, pos + step
+
+            return run
+
+        state = Future.ready((None, self.caches, self.pos))
+        for start, step in self._prefill_segments(s, chunk):
+            state = self.executor.then_execute(step_for(start, step), state)
+        logits, self.caches, self.pos = state.result()
         return logits
 
     def decode(self, tokens: jax.Array, frontend_feats=None) -> jax.Array:

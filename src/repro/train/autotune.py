@@ -19,8 +19,9 @@ import math
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.acc import AdaptiveCoreChunk
 from ..core.cost_model import WorkloadProfile
-from ..core.executor import MeshExecutor
+from ..core.executor import Executor
 from ..core.overhead_law import AccDecision
+from ..core.properties import params_of
 
 
 def token_profile(cfg: ArchConfig, *, training: bool = True) -> WorkloadProfile:
@@ -43,10 +44,13 @@ class TrainPlan:
 
 
 def choose_plan(cfg: ArchConfig, shape: ShapeConfig,
-                mesh_exec: MeshExecutor,
+                mesh_exec: Executor,
                 acc: AdaptiveCoreChunk | None = None,
                 *, max_accum: int = 64) -> TrainPlan:
-    acc = acc or AdaptiveCoreChunk()
+    """``mesh_exec`` may be a ``MeshExecutor`` or any wrapper around one
+    (``adaptive(MeshExecutor(mesh))``); with an ``AdaptiveExecutor`` the
+    acc object rides on the executor and ``acc=`` can be omitted."""
+    acc = acc or params_of(mesh_exec) or AdaptiveCoreChunk()
     profile = token_profile(cfg, training=(shape.kind == "train"))
     tokens = shape.global_batch * shape.seq_len
     d = acc.decide_for_profile(mesh_exec, profile, tokens)

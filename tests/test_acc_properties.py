@@ -3,7 +3,11 @@ object — the system's core invariants."""
 import dataclasses
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property sweeps need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (AdaptiveCoreChunk, SequentialExecutor, SKYLAKE_40,
                         StaticCoreChunk)

@@ -3,7 +3,10 @@ hypothesis sweeps over shapes."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="shape sweeps need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models import gla
 
