@@ -60,3 +60,25 @@ plan = choose_plan(cfg, ShapeConfig("demo", 4096, 256, "train"),
 print(f"\nLM autotune for {cfg.name} @ train_4k: "
       f"data_parallel={plan.data_parallel}, accum={plan.accum}, "
       f"microbatch={plan.microbatch} seqs")
+
+# 5. The same decision drives serving: the continuous-batching scheduler
+#    picks per-tick batch width and prefill chunk from the queued tokens,
+#    and every chunk it runs is timed back into the calibration cache.
+import jax
+
+from repro.models import init_params
+from repro.serve import ServeScheduler
+
+from repro.core import SequentialExecutor
+
+scfg = get_config("qwen3-0.6b").reduced()
+sched = ServeScheduler(scfg, init_params(jax.random.PRNGKey(0), scfg),
+                       n_slots=2, max_len=48,
+                       executor=adaptive(SequentialExecutor()))
+rids = [sched.submit(jnp.arange(1 + 7 * i, 13 + 7 * i) % scfg.vocab_size,
+                     max_new_tokens=4) for i in range(3)]
+outs = sched.run_until_idle()
+print(f"\nserved {len(rids)} requests (2 slots) in {len(sched.trace)} "
+      f"ticks: {[len(outs[r]) for r in rids]} tokens each")
+print("adaptive chunk per tick:",
+      [rec.chunk for rec in sched.trace if rec.prefill_ops])

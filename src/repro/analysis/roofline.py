@@ -146,6 +146,8 @@ def analyze(compiled, *, cfg: ArchConfig, shape: ShapeConfig,
             mesh_name: str, chips: int,
             hw: HardwareSpec = TPU_V5E) -> RooflineReport:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: list of per-program dicts
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())

@@ -11,9 +11,12 @@ Public surface:
   - executor properties: prefer/require, with_priority/with_hint/with_params
   - hardware specs + analytic cost model + SimMachine
 """
-from . import calibration, cost_model, customization, overhead_law, properties
+from . import (calibration, cost_model, customization, feedback,
+               overhead_law, properties)
 from .acc import AdaptiveCoreChunk, StaticCoreChunk
 from .adaptive import AdaptiveExecutor, adaptive
+from .calibration import CalibrationCache
+from .feedback import OnlineFeedback, tag_workload
 from .cost_model import (ADJACENT_DIFFERENCE, WorkloadProfile,
                          artificial_work, t0_analytic, t_iter_analytic)
 from .customization import (get_chunk_size, measure_iteration,
@@ -33,7 +36,8 @@ from .simmachine import EPYC_48, SKYLAKE_40, SimMachine
 
 __all__ = [
     "overhead_law", "customization", "calibration", "cost_model",
-    "properties",
+    "properties", "feedback",
+    "CalibrationCache", "OnlineFeedback", "tag_workload",
     "AdaptiveCoreChunk", "StaticCoreChunk", "AccDecision", "decide",
     "measure_iteration", "processing_units_count", "get_chunk_size",
     "ExecutionPolicy", "seq", "par", "unseq", "par_unseq",

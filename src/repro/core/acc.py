@@ -42,7 +42,13 @@ class AdaptiveCoreChunk:
             return self.t0_override
         if mesh_executor_of(executor) is not None:
             return t0_analytic(self.hardware, executor.num_units())
-        key = ("t0", id(executor))
+        # Key by backend type + width, not object identity: identical
+        # executors share one calibration and the entry survives process
+        # restarts through CalibrationCache persistence.
+        from .executor import unwrap_executor
+
+        inner = unwrap_executor(executor)
+        key = ("t0", type(inner).__name__, max(executor.num_units(), 1))
         return self.cache.t0(
             key, lambda: calibration.measure_t0_empty_task(executor))
 
@@ -56,6 +62,13 @@ class AdaptiveCoreChunk:
         Measured once per workload key, then cached (paper Section 4.2).
         """
         if isinstance(body, WorkloadProfile):
+            # Analytic seed, but online feedback wins once present: a keyed
+            # profile workload whose chunks have been timed (core/feedback)
+            # reads the smoothed observation instead of the roofline guess.
+            if key is not None:
+                smoothed = self.cache.peek_t_iter(key)
+                if smoothed is not None:
+                    return smoothed
             return t_iter_analytic(body, self.hardware)
         k = key if key is not None else ("t_iter", getattr(body, "__name__", id(body)))
         return self.cache.t_iter(
@@ -103,9 +116,13 @@ class AdaptiveCoreChunk:
         return d
 
     def decide_for_profile(self, executor: Executor, profile: WorkloadProfile,
-                           count: int) -> overhead_law.AccDecision:
+                           count: int, key: Hashable | None = None
+                           ) -> overhead_law.AccDecision:
+        """Decision from an analytic profile; with a ``key``, smoothed
+        online-feedback timings (if any) override the roofline estimate."""
         return self.decide(
-            executor, t_iter_analytic(profile, self.hardware), count)
+            executor, self.measure_iteration(executor, profile, count,
+                                             key=key), count)
 
 
 @dataclasses.dataclass

@@ -24,21 +24,45 @@ from typing import Any, Hashable
 
 from .acc import AdaptiveCoreChunk
 from .executor import ExecutorBase, Future
+from .feedback import OnlineFeedback
 from .properties import ExecutorAnnotations, PropertySupport
 
 
 class AdaptiveExecutor(ExecutorBase, PropertySupport):
-    """Wrap ``inner`` with acc-driven core/chunk adaptation."""
+    """Wrap ``inner`` with acc-driven core/chunk adaptation.
 
-    def __init__(self, inner: Any, params: Any = None):
+    Every bulk chunk and tagged continuation is wall-clocked and fed to an
+    ``OnlineFeedback`` recorder (core/feedback.py) that smooths the
+    observation into the acc object's ``CalibrationCache`` — callers get
+    drift-tracking t_iter for free just by running work through the
+    executor.  Pass ``feedback=None`` explicitly to disable telemetry.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, inner: Any, params: Any = None,
+                 feedback: OnlineFeedback | None | object = _SENTINEL):
         self.inner = inner
         self._annotations = ExecutorAnnotations(
             params=params if params is not None else AdaptiveCoreChunk())
+        if feedback is AdaptiveExecutor._SENTINEL:
+            cache = getattr(self.params, "cache", None)
+            feedback = OnlineFeedback(cache) if cache is not None else None
+        self.feedback = feedback
 
     @property
     def params(self) -> Any:
         """The execution-parameters object this executor adapts with."""
         return self.annotations.params
+
+    def with_params(self, params: Any):
+        """Rebinding params must also rebind the feedback recorder: the
+        timings have to land in the cache the *new* acc object reads, not
+        the one the clone inherited from the original."""
+        clone = super().with_params(params)
+        cache = getattr(params, "cache", None)
+        clone.feedback = OnlineFeedback(cache) if cache is not None else None
+        return clone
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"AdaptiveExecutor({self.inner!r})"
@@ -54,9 +78,13 @@ class AdaptiveExecutor(ExecutorBase, PropertySupport):
         return self.inner.async_execute(fn, *args)
 
     def bulk_async_execute(self, fn, chunks) -> list[Future]:
+        if self.feedback is not None:
+            fn = self.feedback.timed_chunk_fn(fn)
         return self.inner.bulk_async_execute(fn, chunks)
 
     def then_execute(self, fn, future: Future) -> Future:
+        if self.feedback is not None:
+            fn = self.feedback.timed_continuation(fn)
         return self.inner.then_execute(fn, future)
 
     # -- customization points (executor-level overloads; the dispatch rule

@@ -9,36 +9,183 @@ Mesh backend: wall-clock is meaningless on the dry-run container, so the
 analytic path (core/cost_model.py) derives the same quantities from
 compiled FLOPs/bytes and the hardware constants.  Both paths produce plain
 floats consumed by the same Overhead-Law solver.
+
+Two additions beyond the paper's one-shot scheme:
+
+* **Online smoothing** (``smooth_t_iter``): observed per-chunk wall-clock
+  from the executors (core/feedback.py) is folded back into the cached
+  t_iter with an exponential moving average, so acc decisions track drift
+  (thermal throttling, co-tenants, data-dependent cost) instead of
+  trusting one calibration forever.
+* **Disk persistence** (``save``/``load``/``persistent``): calibrations
+  survive process restarts as JSON under a cache directory, with a
+  versioned key schema (``SCHEMA_VERSION``) so stale formats are ignored
+  rather than misread.
 """
 from __future__ import annotations
 
+import json
+import os
+import tempfile
+import threading
 import time
 from typing import Any, Callable, Hashable
 
 from .executor import Chunk, Executor, make_chunks
 from .future import when_all
 
+SCHEMA_VERSION = 1
+
+# Smoothing factor for online t_iter feedback: high enough to converge on
+# a drifted workload within a few dozen observations, low enough that one
+# noisy chunk cannot swing the next decision.
+DEFAULT_SMOOTHING = 0.25
+
+
+def _key_str(key: Hashable) -> str:
+    """Stable textual form of a calibration key.
+
+    Keys are small hashables (strings / tuples of strings and ints); their
+    ``repr`` round-trips identically within and across processes, which is
+    all persistence needs (the JSON file maps key-strings to floats; we
+    never parse the string back into a tuple).
+    """
+    return repr(key)
+
 
 class CalibrationCache:
-    """Per-workload memo: first invocation measures, later ones reuse."""
+    """Per-workload memo: first invocation measures, later ones reuse.
 
-    def __init__(self):
-        self._t_iter: dict[Hashable, float] = {}
-        self._t0: dict[Hashable, float] = {}
+    Internally keyed by ``_key_str(key)`` so in-memory lookups and
+    persisted entries share one namespace.  All mutation is lock-guarded:
+    the feedback layer records observations from executor pool threads.
+    """
 
+    def __init__(self, path: str | None = None):
+        self._t_iter: dict[str, float] = {}
+        self._t0: dict[str, float] = {}
+        self._lock = threading.Lock()
+        self.path = path
+        if path:
+            self.load(path)
+
+    # -- memoised measurement ------------------------------------------------
     def t_iter(self, key: Hashable, measure: Callable[[], float]) -> float:
-        if key not in self._t_iter:
-            self._t_iter[key] = measure()
-        return self._t_iter[key]
+        k = _key_str(key)
+        if k not in self._t_iter:
+            value = measure()
+            with self._lock:
+                self._t_iter.setdefault(k, value)
+            self._autosave()
+        return self._t_iter[k]
 
     def t0(self, key: Hashable, measure: Callable[[], float]) -> float:
-        if key not in self._t0:
-            self._t0[key] = measure()
-        return self._t0[key]
+        k = _key_str(key)
+        if k not in self._t0:
+            value = measure()
+            with self._lock:
+                self._t0.setdefault(k, value)
+            self._autosave()
+        return self._t0[k]
+
+    # -- online feedback -----------------------------------------------------
+    def peek_t_iter(self, key: Hashable) -> float | None:
+        """Current t_iter for ``key`` without triggering a measurement."""
+        return self._t_iter.get(_key_str(key))
+
+    def smooth_t_iter(self, key: Hashable, observed: float,
+                      alpha: float = DEFAULT_SMOOTHING) -> float:
+        """Fold an observed per-element time into the cache (EMA).
+
+        First observation seeds the entry; later ones move it by
+        ``alpha``:  new = alpha * observed + (1 - alpha) * old.
+        Returns the smoothed value now backing decisions for ``key``.
+
+        Persistence is write-throttled: the JSON file is rewritten only
+        when the smoothed value actually moved (> 5% relative), so a
+        converged serving loop stops touching disk — observations arrive
+        per chunk, on the hot path.
+        """
+        k = _key_str(key)
+        with self._lock:
+            old = self._t_iter.get(k)
+            value = observed if old is None else (
+                alpha * observed + (1.0 - alpha) * old)
+            self._t_iter[k] = value
+        if old is None or abs(value - old) > 0.05 * abs(old):
+            self._autosave()
+        return value
 
     def clear(self) -> None:
-        self._t_iter.clear()
-        self._t0.clear()
+        with self._lock:
+            self._t_iter.clear()
+            self._t0.clear()
+
+    def __len__(self) -> int:
+        return len(self._t_iter) + len(self._t0)
+
+    # -- persistence ---------------------------------------------------------
+    @classmethod
+    def persistent(cls, cache_dir: str | None = None,
+                   name: str = "calibration.json") -> "CalibrationCache":
+        """A cache backed by ``cache_dir/name`` (created on first save).
+
+        Default directory: ``$REPRO_CAL_CACHE_DIR`` or
+        ``~/.cache/repro-acc``.
+        """
+        cache_dir = cache_dir or os.environ.get(
+            "REPRO_CAL_CACHE_DIR",
+            os.path.join(os.path.expanduser("~"), ".cache", "repro-acc"))
+        return cls(path=os.path.join(cache_dir, name))
+
+    def save(self, path: str | None = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("no path bound to this cache and none given")
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with self._lock:
+            blob = {"version": SCHEMA_VERSION,
+                    "t0": dict(self._t0), "t_iter": dict(self._t_iter)}
+        # Atomic replace so a crashed writer never leaves a torn file.
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        return path
+
+    def load(self, path: str | None = None) -> bool:
+        """Merge entries from ``path``; returns True if anything loaded.
+        Missing files and version mismatches are treated as an empty cache
+        (calibration re-measures; never an error)."""
+        path = path or self.path
+        if not path or not os.path.exists(path):
+            return False
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return False
+        if not isinstance(blob, dict) or blob.get("version") != SCHEMA_VERSION:
+            return False
+        with self._lock:
+            for name, store in (("t0", self._t0), ("t_iter", self._t_iter)):
+                entries = blob.get(name, {})
+                if isinstance(entries, dict):
+                    store.update({str(k): float(v)
+                                  for k, v in entries.items()})
+        return True
+
+    def _autosave(self) -> None:
+        if self.path:
+            try:
+                self.save(self.path)
+            except OSError:  # pragma: no cover - e.g. read-only cache dir
+                pass
 
 
 GLOBAL_CACHE = CalibrationCache()

@@ -1,7 +1,13 @@
-"""Serving driver: batched prefill + decode with the acc-chunked engine.
+"""Serving driver: the continuous-batching scheduler under a request load.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-        --reduced --batch 4 --prompt-len 32 --new-tokens 16
+        --reduced --requests 8 --prompt-len 32 --new-tokens 16 --slots 4
+
+Requests (synthetic prompts of jittered lengths) go through the
+``ServeScheduler``: admission into cache slots, acc-decided prefill
+chunking/batching per tick, slot-batched decode.  Reports throughput and
+per-request latency percentiles.  T0/t_iter calibrations persist across
+runs under ``--cal-cache-dir`` unless ``--no-cal-cache``.
 """
 from __future__ import annotations
 
@@ -11,40 +17,94 @@ import time
 import jax
 
 from ..configs import ARCH_NAMES, get_config
+from ..core.acc import AdaptiveCoreChunk
 from ..core.adaptive import adaptive
+from ..core.calibration import CalibrationCache
 from ..core.executor import SequentialExecutor
 from ..data import make_batch
 from ..models import lm
-from ..serve import ServeEngine
+from ..serve import ServeEngine, ServeScheduler, percentile
+
+
+def serve_cross_attention(cfg, params, args, executor) -> None:
+    """Cross-attention (VLM) archs carry per-request frontend feats the
+    scheduler does not model — they serve through the engine's lock-step
+    batch path instead."""
+    batch = make_batch(cfg, args.requests, args.prompt_len, kind="prefill")
+    engine = ServeEngine(cfg, params, batch=args.requests,
+                         max_len=args.prompt_len + args.new_tokens + 1,
+                         executor=executor)
+    t0 = time.monotonic()
+    out = engine.generate(batch["tokens"], args.new_tokens,
+                          frontend_feats=batch.get("frontend_feats"))
+    dt = time.monotonic() - t0
+    gen = int(out.shape[0] * out.shape[1])
+    print(f"arch={cfg.name} (cross-attention: lock-step batch path) "
+          f"requests={args.requests}")
+    print(f"generated {gen} tokens in {dt:.2f}s ({gen / dt:.1f} tok/s)")
+    print("sample:", out[0].tolist())
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_NAMES), required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--no-cal-cache", action="store_true",
+                    help="do not persist T0/t_iter calibrations to disk")
+    ap.add_argument("--cal-cache-dir", default=None,
+                    help="calibration cache dir (default: "
+                         "$REPRO_CAL_CACHE_DIR or ~/.cache/repro-acc)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    batch = make_batch(cfg, args.batch, args.prompt_len, kind="prefill")
-    feats = batch.get("frontend_feats")
 
-    engine = ServeEngine(cfg, params, batch=args.batch,
-                         max_len=args.prompt_len + args.new_tokens,
-                         executor=adaptive(SequentialExecutor()))
-    t0 = time.time()
-    out = engine.generate(batch["tokens"], args.new_tokens,
-                          frontend_feats=feats)
-    t1 = time.time()
-    print(f"arch={cfg.name} prefill {args.prompt_len} + decode "
-          f"{args.new_tokens} tok in {t1-t0:.2f}s "
-          f"({args.batch*args.new_tokens/(t1-t0):.1f} decode tok/s)")
-    print("sample:", out[0].tolist())
+    cache = CalibrationCache() if args.no_cal_cache \
+        else CalibrationCache.persistent(args.cal_cache_dir)
+    acc = AdaptiveCoreChunk(cache=cache)
+    executor = adaptive(SequentialExecutor(), acc)
+    if "cross_attn" in cfg.layer_kinds():
+        serve_cross_attention(cfg, params, args, executor)
+        return
+    max_len = args.prompt_len + args.new_tokens + 1
+    sched = ServeScheduler(cfg, params, n_slots=args.slots, max_len=max_len,
+                           executor=executor)
+    sched.warmup()
+
+    # Jittered prompt lengths: requests join and leave the batch at
+    # different ticks — the continuous-batching case, not lock-step.
+    tokens = make_batch(cfg, args.requests, args.prompt_len,
+                        kind="prefill")["tokens"]
+    t_start = time.monotonic()
+    rids = []
+    for i in range(args.requests):
+        plen = max(args.prompt_len - (i % 3) * (args.prompt_len // 4), 1)
+        rids.append(sched.submit(tokens[i, :plen],
+                                 max_new_tokens=args.new_tokens))
+    outs = sched.run_until_idle()
+    dt = time.monotonic() - t_start
+
+    lats = [sched.requests[rid].finished_at - sched.requests[rid].arrival
+            for rid in rids]
+    ttfts = [sched.requests[rid].first_token_at - sched.requests[rid].arrival
+             for rid in rids]
+    gen = sum(len(outs[rid]) for rid in rids)
+    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+          f"ticks={len(sched.trace)}")
+    print(f"generated {gen} tokens in {dt:.2f}s ({gen / dt:.1f} tok/s) | "
+          f"latency p50={percentile(lats, 50) * 1e3:.0f}ms "
+          f"p95={percentile(lats, 95) * 1e3:.0f}ms | "
+          f"ttft p50={percentile(ttfts, 50) * 1e3:.0f}ms")
+    print("sample:", outs[rids[0]])
+    if not args.no_cal_cache:
+        cache.save()   # flush any write-throttled smoothing updates
+        print(f"calibration cache: {cache.path} ({len(cache)} entries)")
 
 
 if __name__ == "__main__":

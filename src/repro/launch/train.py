@@ -41,6 +41,11 @@ def main() -> None:
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
     ap.add_argument("--save-every", type=int, default=25)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--no-cal-cache", action="store_true",
+                    help="do not persist T0/t_iter calibrations to disk")
+    ap.add_argument("--cal-cache-dir", default=None,
+                    help="calibration cache dir (default: "
+                         "$REPRO_CAL_CACHE_DIR or ~/.cache/repro-acc)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -56,10 +61,15 @@ def main() -> None:
     if accum is None:
         # acc decision over this host's devices
         from ..configs.base import ShapeConfig
+        from ..core.acc import AdaptiveCoreChunk
+        from ..core.calibration import CalibrationCache
         from ..train.autotune import choose_plan
 
+        cache = CalibrationCache() if args.no_cal_cache \
+            else CalibrationCache.persistent(args.cal_cache_dir)
         mesh = mesh_lib.make_host_mesh()
-        mexec = adaptive(MeshExecutor(mesh))   # acc rides on the executor
+        # acc rides on the executor; calibrations persist across runs
+        mexec = adaptive(MeshExecutor(mesh), AdaptiveCoreChunk(cache=cache))
         shape = ShapeConfig("cli", args.seq, args.batch, "train")
         plan = choose_plan(cfg, shape, mexec)
         accum = plan.accum

@@ -252,10 +252,13 @@ def _layer_params(params, cfg: ArchConfig, layer: int):
 
 def forward_cached(params: dict, tokens: jax.Array, caches: list, pos,
                    cfg: ArchConfig, *, window: int | None = None,
-                   frontend_feats=None
+                   frontend_feats=None, logit_index=None
                    ) -> tuple[jax.Array, list]:
     """tokens: (B, L_new); caches: per-layer state list; pos: scalar count
-    of tokens already cached.  Returns (logits of last position, caches)."""
+    of tokens already cached.  Returns (logits of one position, caches):
+    the last position by default, or ``logit_index`` (int or traced
+    scalar) — the serving scheduler pads prefill chunks to a bucketed
+    length and needs the logits of the last *real* token."""
     cd = jnp.dtype(cfg.compute_dtype)
     window = window if window is not None else cfg.attn_window
     x = flags.constrain(cm.embed(params["embed"], tokens, cd))
@@ -272,7 +275,11 @@ def forward_cached(params: dict, tokens: jax.Array, caches: list, pos,
             cache=caches[layer], cache_pos=pos)
         x = flags.constrain(x)
         new_caches.append(nc)
-    return _logits(params, cfg, x[:, -1:]), new_caches
+    if logit_index is None:
+        xs = x[:, -1:]
+    else:
+        xs = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
+    return _logits(params, cfg, xs), new_caches
 
 
 def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,

@@ -1,3 +1,13 @@
-from .engine import ServeEngine, make_decode_step, make_prefill_step
+from .engine import (ServeEngine, make_decode_step, make_prefill_step,
+                     prefill_segments)
+from .kv_cache import SlotKVCachePool
+from .scheduler import (Request, RequestState, ServeScheduler, TickRecord,
+                        percentile)
 
-__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step"]
+__all__ = [
+    "ServeEngine", "make_decode_step", "make_prefill_step",
+    "prefill_segments",
+    "SlotKVCachePool",
+    "ServeScheduler", "Request", "RequestState", "TickRecord",
+    "percentile",
+]

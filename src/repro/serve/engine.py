@@ -1,14 +1,19 @@
-"""Serving engine: chunked prefill + batched decode with KV/SSM caches.
+"""Serving engine: a thin facade over the continuous-batching runtime.
 
-The acc executor drives the prefill chunk size (the workload is the
-prompt; chunks are prefill segments) and — at the launch layer — how many
-devices a batch occupies.  ``make_prefill_step``/``make_decode_step``
-produce the jit-able pure functions the dry-run lowers.
+``generate`` routes through ``ServeScheduler`` (serve/scheduler.py):
+requests go into the arrival queue, acc decides per-tick batching and
+prefill chunking, and the slot pool (serve/kv_cache.py) holds the caches.
+The stateful single-batch surface (``prefill`` / ``decode`` / ``pos``)
+remains for callers that drive one lock-step batch themselves — it is
+also the path for cross-attention archs, whose per-request frontend
+feats the scheduler does not carry.
+
+``make_prefill_step``/``make_decode_step`` produce the jit-able pure
+functions the dry-run lowers.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +24,32 @@ from ..core.executor import SequentialExecutor
 from ..core.future import Future
 from ..core.properties import params_of
 from ..models import lm
+
+
+def prefill_segments(s: int, chunk: int, *, pos: int = 0,
+                     window: int | None = None) -> list[tuple[int, int]]:
+    """(start, step) prefill pieces for ``s`` new tokens.
+
+    Ring-buffer (SWA) writes must not cross the window boundary, so steps
+    depend on the evolving position — a position already *on* a boundary
+    gets a full-window step.  ``window`` that is None or <= 0 means no
+    windowing.  The segments are guaranteed to tile [0, s) exactly.
+    """
+    if s < 0:
+        raise ValueError(f"negative token count: {s}")
+    window = None if window is None or window <= 0 else window
+    chunk = max(int(chunk), 1)
+    segs: list[tuple[int, int]] = []
+    start = 0
+    while start < s:
+        step = min(chunk, s - start)
+        if window is not None:
+            step = min(step, window - pos % window)
+        segs.append((start, step))
+        pos += step
+        start += step
+    assert sum(step for _, step in segs) == s, (segs, s)
+    return segs
 
 
 def make_decode_step(cfg: ArchConfig, *, window: int | None = None
@@ -62,28 +93,30 @@ class ServeEngine:
         self.params = params
         self.window = window if window is not None else cfg.attn_window
         self.max_len = max_len
-        self.caches = lm.init_caches(cfg, batch, max_len, window=self.window)
-        self.pos = 0
+        self.batch = batch
+        self._caches = None   # lazy: the scheduled generate() path never
+        self.pos = 0          # touches the monolithic batch cache
         # v2: an AdaptiveExecutor carries the acc object; an explicit
         # ``acc=`` argument still wins for backwards compatibility.
         self.executor = executor if executor is not None \
             else SequentialExecutor()
         self.acc = acc or params_of(self.executor) or AdaptiveCoreChunk()
         self._decode = jax.jit(make_decode_step(cfg, window=self.window))
+        self._sched = None   # lazily built, reused across generate() calls
+
+    @property
+    def caches(self):
+        if self._caches is None:
+            self._caches = lm.init_caches(self.cfg, self.batch, self.max_len,
+                                          window=self.window)
+        return self._caches
+
+    @caches.setter
+    def caches(self, value):
+        self._caches = value
 
     def _prefill_segments(self, s: int, chunk: int) -> list[tuple[int, int]]:
-        """(start, step) prefill pieces; ring-buffer writes must not cross
-        the window boundary, so steps depend on the evolving position."""
-        segs = []
-        start, pos = 0, self.pos
-        while start < s:
-            step = min(chunk, s - start)
-            if self.window:
-                step = min(step, self.window, self.window - pos % self.window)
-            segs.append((start, step))
-            pos += step
-            start += step
-        return segs
+        return prefill_segments(s, chunk, pos=self.pos, window=self.window)
 
     def prefill(self, tokens: jax.Array, frontend_feats=None,
                 chunk: int | None = None) -> jax.Array:
@@ -128,7 +161,38 @@ class ServeEngine:
 
     def generate(self, prompt: jax.Array, n_new: int,
                  frontend_feats=None) -> jax.Array:
-        """Greedy generation; returns (B, n_new) token ids."""
+        """Greedy generation; returns (B, n_new) token ids.
+
+        Routed through the continuous-batching scheduler (one request per
+        prompt row, all sharing the slot pool) whenever the arch supports
+        it; cross-attention archs and engines with existing cache state
+        fall back to the legacy lock-step batch loop.
+        """
+        if frontend_feats is None and self.pos == 0 \
+                and "cross_attn" not in self.cfg.layer_kinds():
+            return self._generate_scheduled(prompt, n_new)
+        return self._generate_legacy(prompt, n_new, frontend_feats)
+
+    def _generate_scheduled(self, prompt: jax.Array, n_new: int) -> jax.Array:
+        from .scheduler import ServeScheduler
+
+        bsz = prompt.shape[0]
+        # One scheduler per engine: its slot pool and compiled prefill/
+        # decode steps are reused across generate() calls (the scheduler
+        # drains fully each call, so no state leaks between them).
+        if self._sched is None or self._sched.pool.n_slots < bsz:
+            self._sched = ServeScheduler(
+                self.cfg, self.params, n_slots=bsz, max_len=self.max_len,
+                window=self.window, executor=self.executor, acc=self.acc)
+        rids = [self._sched.submit(prompt[i], max_new_tokens=n_new)
+                for i in range(bsz)]
+        outs = self._sched.run_until_idle()
+        tokens = jnp.asarray([outs[rid] for rid in rids], jnp.int32)
+        self._sched.clear_finished()   # facade reuse must not leak history
+        return tokens
+
+    def _generate_legacy(self, prompt: jax.Array, n_new: int,
+                         frontend_feats=None) -> jax.Array:
         logits = self.prefill(prompt, frontend_feats)
         out = []
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]

@@ -1,0 +1,128 @@
+"""Slot-based KV/SSM cache pool for continuous batching.
+
+The old engine held one monolithic cache per *batch* — every request in a
+batch had to start and stop together, and a new batch meant a fresh
+``lm.init_caches`` allocation.  The pool instead allocates the per-layer
+caches **once**, with the leading batch dimension reinterpreted as
+``n_slots`` fixed-size slots.  A request acquires a slot from the
+free-list on admission, carries its own position inside the slot, and
+releases the slot when it finishes — so requests of different lengths
+join and leave the running batch with no cache reallocation (asserted by
+``allocations``, which counts device-buffer allocations and must stay at
+1 for the pool's lifetime).
+
+Layer cache layout (from ``lm.init_caches``):
+  * attention:      {"k","v"} of shape (n_slots, H_kv, S, D) — full or
+    ring-buffer (SWA) along S;
+  * mamba2 / xLSTM: recurrent state arrays with leading dim n_slots;
+  * cross_attn:     None (KV recomputed from frontend feats — the
+    scheduler does not serve cross-attention requests).
+
+Rows are functionally updated (``.at[slot].set``); XLA reuses the
+buffers, and the pool arrays never change shape — the property that lets
+one compiled decode step serve every mix of active requests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+
+
+def _tree_map(fn, tree):
+    """tree_map that keeps ``None`` layer entries (cross_attn) in place."""
+    return jax.tree.map(fn, tree, is_leaf=lambda x: x is None)
+
+
+def _maybe(fn):
+    return lambda x: None if x is None else fn(x)
+
+
+class SlotKVCachePool:
+    """Fixed-size cache slots with a free-list and per-slot positions."""
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
+                 window: int | None = None, dtype=None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.window = window if window is not None else cfg.attn_window
+        self.caches = lm.init_caches(cfg, n_slots, max_len,
+                                     window=self.window, dtype=dtype)
+        self.allocations = 1            # init_caches calls ever made
+        self._free = list(range(n_slots - 1, -1, -1))
+        self.positions = [0] * n_slots  # tokens cached per slot (host side)
+        self.owner: list[Any] = [None] * n_slots
+        self._write_jit = None
+
+    # -- free-list -----------------------------------------------------------
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def acquire(self, owner: Any = None) -> int | None:
+        """Claim a slot for ``owner``; None when the pool is exhausted.
+        The slot's recurrent state is zeroed (ring/full KV rows need no
+        wipe — attention masks by position — but SSM states carry over)."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self.owner[slot] = owner
+        self.positions[slot] = 0
+        self._zero_slot_states(slot)
+        return slot
+
+    def release(self, slot: int) -> None:
+        if self.owner[slot] is None and slot in self._free:
+            raise ValueError(f"slot {slot} double-released")
+        self.owner[slot] = None
+        self.positions[slot] = 0
+        self._free.append(slot)
+
+    def _zero_slot_states(self, slot: int) -> None:
+        """Zero the non-attention (recurrent) state rows of ``slot``."""
+
+        def zero_row(kind: str, cache):
+            if cache is None or kind in ("attn", "shared_attn"):
+                return cache
+            return _tree_map(_maybe(lambda x: x.at[slot].set(0)), cache)
+
+        self.caches = [zero_row(kind, c) for kind, c in
+                       zip(self.cfg.layer_kinds(), self.caches)]
+
+    # -- slot I/O ------------------------------------------------------------
+    def read_slot(self, slot: int):
+        """The slot's caches as a batch-of-1 pytree (device views)."""
+        return _tree_map(_maybe(lambda x: x[slot:slot + 1]), self.caches)
+
+    def write_slot(self, slot: int, row_caches) -> None:
+        """Write a batch-of-1 cache pytree back into ``slot``.
+
+        Goes through one jitted update with the pool donated, so XLA
+        aliases the output into the existing buffers — an eager
+        ``.at[slot].set`` would copy every layer's full pool array per
+        chunk.  ``slot`` rides in as a traced scalar (one compile total).
+        """
+        if self._write_jit is None:
+            def write(caches, row, s):
+                return jax.tree.map(
+                    lambda c, n: c if c is None else
+                    jax.lax.dynamic_update_slice(
+                        c, n.astype(c.dtype),
+                        (s,) + (0,) * (c.ndim - 1)),
+                    caches, row, is_leaf=lambda x: x is None)
+
+            self._write_jit = jax.jit(write, donate_argnums=0)
+        self.caches = self._write_jit(self.caches, row_caches,
+                                      jnp.int32(slot))
+
+    def positions_array(self) -> jax.Array:
+        """Per-slot positions as an (n_slots,) int32 device array (free
+        slots report 0; their decode lanes are ignored)."""
+        return jnp.asarray(
+            [min(p, self.max_len - 1) for p in self.positions], jnp.int32)

@@ -1,0 +1,475 @@
+"""Request-level continuous-batching scheduler driven by the acc model.
+
+The paper's executor answers "how many cores, what chunk size?" for a
+parallel loop from measured ``T0`` / ``t_iter``.  Re-read for serving,
+the same decision is "how many requests advance this tick, what prefill
+chunk?": the *workload* is the set of currently queued tokens (remaining
+prefill plus one decode token per running request), and
+``AdaptiveCoreChunk.decide`` over its ``WorkloadProfile`` yields
+
+* ``n_cores``     → how many requests' prefills advance per tick
+  (devices↔batching — Eq. 7's "leave units free" becomes "don't open
+  more concurrent prefills than the queue can keep efficient");
+* ``chunk_elems`` → the prefill chunk size per tick (Eq. 10 with the
+  T_m floor), snapped to a small bucket set so compiled shapes are
+  bounded.
+
+Timings of every prefill chunk and decode step flow back through the
+executor telemetry (core/feedback.py) into the calibration cache, so the
+decisions track observed drift instead of a one-shot calibration — the
+continuous adaptation HPX's Smart Executors argue for.
+
+Mechanics:
+
+* Requests wait in an arrival queue (earliest-deadline-first, FIFO among
+  equal deadlines), are admitted when a cache slot frees up
+  (serve/kv_cache.py), prefill chunk-by-chunk, then decode greedily.
+* Decode runs **one compiled step for the whole slot pool** regardless of
+  which slots are active: per-slot positions ride in as an array, lanes
+  are vmapped, and inactive lanes' cache writes are masked out — so
+  requests of any length mix in one batch with zero recompilation and
+  zero cache reallocation.
+* Everything is deterministic under ``SequentialExecutor`` (tick trace is
+  a pure function of arrivals), which is what the tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.acc import AdaptiveCoreChunk
+from ..core.executor import Chunk, SequentialExecutor
+from ..core.feedback import tag_workload
+from ..core.future import Future, when_all
+from ..core.properties import params_of
+from ..models import lm
+from ..train.autotune import serve_profiles
+from .kv_cache import SlotKVCachePool
+
+DEFAULT_CHUNK_BUCKETS = (8, 16, 32, 64, 128, 256)
+
+
+def percentile(xs, p: float) -> float:
+    """Latency-report percentile; NaN on empty (shared by the launch CLI
+    and the throughput benchmark so their numbers can't diverge)."""
+    import numpy as np
+
+    return float(np.percentile(np.asarray(xs), p)) if len(xs) else \
+        float("nan")
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle bookkeeping."""
+
+    rid: int
+    tokens: jax.Array               # (S,) int32 prompt
+    max_new_tokens: int
+    arrival: float
+    deadline: float | None = None
+    state: RequestState = RequestState.WAITING
+    slot: int | None = None
+    prefilled: int = 0              # prompt tokens already in the cache
+    out: list[int] = dataclasses.field(default_factory=list)
+    first_token_at: float | None = None
+    finished_at: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def remaining_prefill(self) -> int:
+        return self.prompt_len - self.prefilled
+
+
+@dataclasses.dataclass(frozen=True)
+class TickRecord:
+    """What one scheduler tick did (the determinism tests compare these)."""
+
+    tick: int
+    admitted: tuple[int, ...]
+    prefill_ops: tuple[tuple[int, int], ...]   # (rid, tokens advanced)
+    decoded: tuple[int, ...]
+    finished: tuple[int, ...]
+    queued_tokens: int
+    n_cores: int
+    chunk: int
+
+
+class ServeScheduler:
+    """Continuous batching over a slot pool, acc-decided per tick."""
+
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int,
+                 max_len: int, window: int | None = None,
+                 executor=None, acc: AdaptiveCoreChunk | None = None,
+                 chunk_buckets: Sequence[int] = DEFAULT_CHUNK_BUCKETS,
+                 clock: Callable[[], float] = time.monotonic):
+        kinds = set(cfg.layer_kinds())
+        if "cross_attn" in kinds:
+            raise ValueError(
+                "ServeScheduler does not serve cross-attention archs "
+                "(per-request frontend feats); use ServeEngine's legacy "
+                "batch path")
+        self.cfg = cfg
+        self.params = params
+        self.window = window if window is not None else cfg.attn_window
+        if self.window is not None and self.window <= 0:
+            self.window = None
+        self.max_len = max_len
+        self.executor = executor if executor is not None \
+            else SequentialExecutor()
+        self.acc = acc or params_of(self.executor) or AdaptiveCoreChunk()
+        self.pool = SlotKVCachePool(cfg, n_slots, max_len,
+                                    window=self.window)
+        self.clock = clock
+        self.chunk_buckets = tuple(sorted(set(int(b) for b in chunk_buckets
+                                              if b > 0))) or (max_len,)
+        # Padding prefill chunks to a bucket is only sound when every
+        # layer masks by position: recurrent (SSM/xLSTM) states would
+        # absorb the pad tokens, and ring (SWA) writes could wrap over
+        # live entries — those archs run exact-size chunks instead.
+        self._pad_ok = self.window is None and kinds <= {"attn",
+                                                         "shared_attn"}
+        self.prefill_profile, self.decode_profile = serve_profiles(cfg)
+        # Workload keys carry the model's shape, not just its name:
+        # cfg.reduced() keeps the name, and a persisted t_iter smoothed on
+        # the tiny config must never drive decisions for the full one.
+        sig = (cfg.name, cfg.d_model, cfg.n_layers)
+        self.prefill_key = ("serve_prefill",) + sig
+        self.decode_key = ("serve_decode",) + sig
+        self._rid = itertools.count()
+        self._waiting: list[Request] = []
+        self._active: list[Request] = []
+        self.requests: dict[int, Request] = {}
+        self.trace: list[TickRecord] = []
+        self._tick = 0
+        self._prefill_jit: dict[int, Any] = {}
+        self._decode_jit = None
+        # Shapes that have executed at least once: a cold call pays XLA
+        # compilation, and seconds of compile time must never be recorded
+        # as t_iter (it would seed — and persist — a poisoned EMA).
+        self._warm_prefill: set[int] = set()
+        self._warm_decode = False
+
+    # ------------------------------------------------------------------ API
+    def submit(self, tokens, max_new_tokens: int = 16, *,
+               deadline: float | None = None,
+               arrival: float | None = None) -> int:
+        """Enqueue a request; returns its id.  ``tokens`` is a 1-D prompt.
+
+        The prompt must fit the slot: prompt + generated tokens are capped
+        by the pool's ``max_len``.
+        """
+        tokens = jnp.asarray(tokens, jnp.int32).reshape(-1)
+        if tokens.shape[0] == 0:
+            raise ValueError("empty prompt")
+        if tokens.shape[0] >= self.max_len:
+            raise ValueError(
+                f"prompt of {tokens.shape[0]} tokens does not fit a "
+                f"max_len={self.max_len} slot")
+        rid = next(self._rid)
+        req = Request(rid=rid, tokens=tokens,
+                      max_new_tokens=max(int(max_new_tokens), 1),
+                      arrival=self.clock() if arrival is None else arrival,
+                      deadline=deadline)
+        self.requests[rid] = req
+        self._waiting.append(req)
+        return rid
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished (waiting + running)."""
+        return len(self._waiting) + len(self._active)
+
+    def results(self) -> dict[int, list[int]]:
+        return {rid: list(r.out) for rid, r in self.requests.items()
+                if r.state is RequestState.DONE}
+
+    def clear_finished(self) -> None:
+        """Drop completed requests and the tick trace.  Long-lived
+        callers (the ServeEngine facade) call this after draining —
+        otherwise every prompt and TickRecord ever served stays
+        reachable."""
+        self.requests = {rid: r for rid, r in self.requests.items()
+                         if r.state is not RequestState.DONE}
+        self.trace.clear()
+
+    def run_until_idle(self, max_ticks: int = 100_000) -> dict[int, list[int]]:
+        for _ in range(max_ticks):
+            if not self.pending:
+                return self.results()
+            self.tick()
+        raise RuntimeError(f"scheduler did not drain in {max_ticks} ticks")
+
+    def warmup(self) -> None:
+        """Compile the decode step and the largest prefill bucket so the
+        first timed tick measures compute, not compilation."""
+        self._decode_step()(
+            self.params, self.pool.caches,
+            jnp.zeros(self.pool.n_slots, jnp.int32),
+            self.pool.positions_array(),
+            jnp.zeros(self.pool.n_slots, dtype=bool))
+        self._warm_decode = True
+        if self._pad_ok:
+            for b in self.chunk_buckets:
+                if b < self.max_len:
+                    row = self.pool.read_slot(0)
+                    self._prefill_step(b)(
+                        self.params, row, jnp.zeros((1, b), jnp.int32),
+                        jnp.int32(0), jnp.int32(b - 1))
+                    self._warm_prefill.add(b)
+
+    # ----------------------------------------------------------------- tick
+    def tick(self) -> TickRecord:
+        """One scheduler round: admit → decide → prefill chunks → decode."""
+        admitted = self._admit()
+        queued, cores, chunk = self._decide()
+        prefill_ops, pf_finished = self._run_prefill(cores, chunk)
+        decoded, dec_finished = self._run_decode()
+        finished = pf_finished + dec_finished
+        self._active = [r for r in self._active
+                        if r.state is not RequestState.DONE]
+        rec = TickRecord(
+            tick=self._tick, admitted=tuple(admitted),
+            prefill_ops=tuple(prefill_ops), decoded=tuple(decoded),
+            finished=tuple(finished), queued_tokens=queued,
+            n_cores=cores, chunk=chunk)
+        self.trace.append(rec)
+        self._tick += 1
+        return rec
+
+    def _admit(self) -> list[int]:
+        """Earliest-deadline-first admission into free slots; FIFO among
+        requests without deadlines.  Exhausted pool ⇒ requests keep
+        waiting (they are *queued*, never dropped)."""
+        self._waiting.sort(key=lambda r: (
+            r.deadline if r.deadline is not None else float("inf"),
+            r.arrival, r.rid))
+        admitted = []
+        while self._waiting and self.pool.free_slots():
+            req = self._waiting.pop(0)
+            req.slot = self.pool.acquire(req.rid)
+            req.state = RequestState.PREFILL
+            self._active.append(req)
+            admitted.append(req.rid)
+        return admitted
+
+    def _decide(self) -> tuple[int, int, int]:
+        """(queued tokens, batch width, prefill chunk) for this tick.
+
+        Spoken through the three customization points so any
+        execution-parameters object plugs in: ``AdaptiveCoreChunk`` gives
+        the Overhead-Law decision, ``StaticCoreChunk`` the fixed
+        OpenMP-static split.  The queue's t_iter is the token-weighted
+        mix of the prefill and decode regimes — each priced by its own
+        profile, each overridden by its own online-feedback key once the
+        executor has timed real chunks of that kind.
+        """
+        pf_tokens = sum(r.remaining_prefill for r in self._active
+                        if r.state is RequestState.PREFILL)
+        dec_tokens = sum(1 for r in self._active
+                         if r.state is RequestState.DECODE)
+        queued = pf_tokens + dec_tokens
+        if queued <= 0:
+            return 0, 0, 0
+        t_pf = self.acc.measure_iteration(
+            self.executor, self.prefill_profile, max(pf_tokens, 1),
+            key=self.prefill_key)
+        t_dec = self.acc.measure_iteration(
+            self.executor, self.decode_profile, max(dec_tokens, 1),
+            key=self.decode_key)
+        t_iter = (pf_tokens * t_pf + dec_tokens * t_dec) / queued
+        cores = self.acc.processing_units_count(self.executor, t_iter,
+                                                queued)
+        chunk = self.acc.get_chunk_size(self.executor, t_iter, cores,
+                                        queued)
+        return queued, max(cores, 1), max(chunk, 1)
+
+    # -- prefill -------------------------------------------------------------
+    def _bucket(self, step: int) -> int:
+        """Smallest bucket >= step (the compiled-width set); steps above
+        the largest bucket are clamped down to it."""
+        for b in self.chunk_buckets:
+            if b >= step:
+                return b
+        return self.chunk_buckets[-1]
+
+    def _segment(self, req: Request, chunk: int) -> int:
+        """Next prefill piece for ``req``: the decided chunk, clamped to
+        the remaining prompt, never crossing a ring-buffer (SWA) window
+        boundary, and never wider than the largest compile bucket."""
+        step = min(max(chunk, 1), req.remaining_prefill,
+                   self.chunk_buckets[-1])
+        if self.window is not None:
+            pos = self.pool.positions[req.slot]
+            step = min(step, self.window - pos % self.window)
+        return step
+
+    def _prefill_step(self, length: int):
+        fn = self._prefill_jit.get(length)
+        if fn is None:
+            cfg, window = self.cfg, self.window
+
+            def prefill_chunk(params, row_caches, piece, pos, last):
+                return lm.forward_cached(params, piece, row_caches, pos,
+                                         cfg, window=window,
+                                         logit_index=last)
+
+            fn = jax.jit(prefill_chunk)
+            self._prefill_jit[length] = fn
+        return fn
+
+    def _run_prefill(self, cores: int, chunk: int):
+        ready = [r for r in self._active if r.state is RequestState.PREFILL]
+        if not ready or chunk <= 0:
+            return [], []
+        # n_cores ↔ how many requests advance this tick (batching width).
+        width = min(max(cores, 1), len(ready))
+        ops = []
+        for req in ready[:width]:
+            step = self._segment(req, chunk)
+            padded = self._bucket(step) if self._pad_ok else step
+            if padded > self.max_len - req.prefilled:
+                padded = step    # no room to pad: exact-size chunk
+            ops.append((req, step, padded))
+
+        pool, params = self.pool, self.params
+
+        def run_chunk(chunk: Chunk):
+            req, step, padded = ops[chunk.start]
+            piece = jax.lax.dynamic_slice_in_dim(
+                req.tokens, req.prefilled, step)
+            if padded > step:
+                piece = jnp.pad(piece, (0, padded - step))
+            row = pool.read_slot(req.slot)
+            # Synchronise inside the thunk: the executor times this call
+            # for the feedback loop, and an async jit dispatch would
+            # record microseconds of launch cost as the chunk's t_iter.
+            return jax.block_until_ready(self._prefill_step(padded)(
+                params, row, piece[None], jnp.int32(req.prefilled),
+                jnp.int32(step - 1)))
+
+        # Feedback only sees warm shapes: a tick whose ops include a
+        # never-executed chunk width runs untimed (it compiles).
+        if all(padded in self._warm_prefill for _, _, padded in ops):
+            tag_workload(run_chunk, self.prefill_key)
+        futs = self.executor.bulk_async_execute(
+            run_chunk, [Chunk(i, step) for i, (_, step, _) in enumerate(ops)])
+        outs = when_all(futs).result()
+        self._warm_prefill.update(padded for _, _, padded in ops)
+
+        # Cache writes and state transitions happen on the caller's
+        # thread, after the join — chunk thunks never mutate the pool.
+        prefill_ops, finished = [], []
+        for (req, step, _), (logits, new_row) in zip(ops, outs):
+            self.pool.write_slot(req.slot, new_row)
+            req.prefilled += step
+            self.pool.positions[req.slot] = req.prefilled
+            prefill_ops.append((req.rid, step))
+            if req.remaining_prefill == 0:
+                tok = int(jnp.argmax(logits[0, 0]))
+                req.out.append(tok)
+                req.first_token_at = self.clock()
+                req.state = RequestState.DECODE
+                if len(req.out) >= req.max_new_tokens:
+                    self._finish(req)
+                    finished.append(req.rid)
+        return prefill_ops, finished
+
+    # -- decode --------------------------------------------------------------
+    def _decode_step(self):
+        if self._decode_jit is None:
+            cfg, window = self.cfg, self.window
+
+            def lane(params, row_caches, tok, pos):
+                caches = jax.tree.map(
+                    lambda x: None if x is None else x[None], row_caches,
+                    is_leaf=lambda x: x is None)
+                logits, new = lm.forward_cached(
+                    params, tok[None, None], caches, pos, cfg,
+                    window=window)
+                squeezed = jax.tree.map(
+                    lambda x: None if x is None else x[0], new,
+                    is_leaf=lambda x: x is None)
+                return jnp.argmax(logits[0, 0], axis=-1), squeezed
+
+            lanes = jax.vmap(lane, in_axes=(None, 0, 0, 0))
+
+            def decode_all(params, caches, toks, poss, active):
+                next_toks, new_caches = lanes(params, caches, toks, poss)
+                # Masked merge: inactive lanes (free or mid-prefill
+                # slots) must not see their KV rows or recurrent states
+                # advanced by the garbage token their lane decoded.
+                def keep(old, new):
+                    if old is None:
+                        return None
+                    a = active.reshape((-1,) + (1,) * (old.ndim - 1))
+                    return jnp.where(a, new, old)
+
+                merged = jax.tree.map(keep, caches, new_caches,
+                                      is_leaf=lambda x: x is None)
+                return next_toks, merged
+
+            self._decode_jit = jax.jit(decode_all)
+        return self._decode_jit
+
+    def _run_decode(self):
+        decs = [r for r in self._active if r.state is RequestState.DECODE]
+        if not decs:
+            return [], []
+        n = self.pool.n_slots
+        toks = [0] * n
+        active = [False] * n
+        for r in decs:
+            toks[r.slot] = r.out[-1]
+            active[r.slot] = True
+        step = self._decode_step()
+        pool, params = self.pool, self.params
+        toks_a = jnp.asarray(toks, jnp.int32)
+        poss_a = pool.positions_array()
+        active_a = jnp.asarray(active, dtype=bool)
+
+        def run_decode(_):
+            # Synchronised for the same reason as the prefill thunks.
+            return jax.block_until_ready(
+                step(params, pool.caches, toks_a, poss_a, active_a))
+
+        if self._warm_decode:   # cold call compiles; keep it untimed
+            tag_workload(run_decode, self.decode_key, elems=len(decs))
+        fut = self.executor.then_execute(run_decode, Future.ready(None))
+        self._warm_decode = True
+        next_toks, new_caches = fut.result()
+        self.pool.caches = new_caches
+        next_toks = jax.device_get(next_toks)
+
+        decoded, finished = [], []
+        for r in decs:
+            self.pool.positions[r.slot] += 1
+            r.out.append(int(next_toks[r.slot]))
+            decoded.append(r.rid)
+            if len(r.out) >= r.max_new_tokens \
+                    or self.pool.positions[r.slot] >= self.max_len:
+                self._finish(r)
+                finished.append(r.rid)
+        return decoded, finished
+
+    def _finish(self, req: Request) -> None:
+        req.out = req.out[:req.max_new_tokens]
+        req.finished_at = self.clock()
+        req.state = RequestState.DONE
+        self.pool.release(req.slot)

@@ -35,6 +35,23 @@ def token_profile(cfg: ArchConfig, *, training: bool = True) -> WorkloadProfile:
                            name=f"{cfg.name}-{'train' if training else 'serve'}")
 
 
+def serve_profiles(cfg: ArchConfig) -> tuple[WorkloadProfile, WorkloadProfile]:
+    """(prefill, decode) per-token profiles for the serving scheduler.
+
+    Prefill reuses the training-loop profile at forward-only FLOPs (the
+    workload element is a prompt token).  Decode is the memory-bound
+    regime: each generated token re-reads the active weights, so the
+    bytes term is the full 2-byte-per-param weight stream rather than the
+    amortised activation traffic.
+    """
+    prefill = token_profile(cfg, training=False)
+    n_active = cfg.active_param_count()
+    decode = WorkloadProfile(flops_per_elem=2.0 * n_active,
+                             bytes_per_elem=2.0 * n_active,
+                             name=f"{cfg.name}-decode")
+    return prefill, decode
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainPlan:
     data_parallel: int       # devices the step occupies (acc Eq. 7)
