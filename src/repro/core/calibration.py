@@ -21,6 +21,12 @@ Two additions beyond the paper's one-shot scheme:
   survive process restarts as JSON under a cache directory, with a
   versioned key schema (``SCHEMA_VERSION``) so stale formats are ignored
   rather than misread.
+* **Tuned-winner records** (``tuned``/``set_tuned``): the kernel block
+  autotuner (kernels/autotune.py) persists its measured winners — small
+  JSON dicts, not scalars — through the same store, so kernel tuning,
+  T0 and t_iter share one file, one schema version and one atomic
+  writer.  Schema v2 added this table; v1 files still load (the table
+  is additive), files are always written as v2.
 """
 from __future__ import annotations
 
@@ -34,7 +40,7 @@ from typing import Any, Callable, Hashable
 from .executor import Chunk, Executor, make_chunks
 from .future import when_all
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # Smoothing factor for online t_iter feedback: high enough to converge on
 # a drifted workload within a few dozen observations, low enough that one
@@ -64,6 +70,7 @@ class CalibrationCache:
     def __init__(self, path: str | None = None):
         self._t_iter: dict[str, float] = {}
         self._t0: dict[str, float] = {}
+        self._tuned: dict[str, dict] = {}
         self._lock = threading.Lock()
         self.path = path
         if path:
@@ -116,13 +123,31 @@ class CalibrationCache:
             self._autosave()
         return value
 
+    # -- tuned-winner records (kernel block autotuner) -----------------------
+    def tuned(self, key: Hashable) -> dict | None:
+        """The persisted winner record for ``key``, or None.
+
+        Records are small JSON-able dicts owned by the autotuner (block
+        sizes, the measured seconds, the hardware key they were measured
+        on) — this layer only stores and round-trips them.
+        """
+        rec = self._tuned.get(_key_str(key))
+        return dict(rec) if rec is not None else None
+
+    def set_tuned(self, key: Hashable, record: dict) -> None:
+        """Persist a winner record (overwrites any previous one)."""
+        with self._lock:
+            self._tuned[_key_str(key)] = dict(record)
+        self._autosave()
+
     def clear(self) -> None:
         with self._lock:
             self._t_iter.clear()
             self._t0.clear()
+            self._tuned.clear()
 
     def __len__(self) -> int:
-        return len(self._t_iter) + len(self._t0)
+        return len(self._t_iter) + len(self._t0) + len(self._tuned)
 
     # -- persistence ---------------------------------------------------------
     @classmethod
@@ -145,7 +170,8 @@ class CalibrationCache:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with self._lock:
             blob = {"version": SCHEMA_VERSION,
-                    "t0": dict(self._t0), "t_iter": dict(self._t_iter)}
+                    "t0": dict(self._t0), "t_iter": dict(self._t_iter),
+                    "tuned": {k: dict(v) for k, v in self._tuned.items()}}
         # Atomic replace so a crashed writer never leaves a torn file.
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                    suffix=".tmp")
@@ -170,7 +196,10 @@ class CalibrationCache:
                 blob = json.load(f)
         except (OSError, json.JSONDecodeError):
             return False
-        if not isinstance(blob, dict) or blob.get("version") != SCHEMA_VERSION:
+        # v2 added the (optional) "tuned" table; v1 files are still valid
+        # scalar stores, so reading them preserves old calibrations.
+        if not isinstance(blob, dict) or blob.get("version") not in (
+                1, SCHEMA_VERSION):
             return False
         with self._lock:
             for name, store in (("t0", self._t0), ("t_iter", self._t_iter)):
@@ -178,6 +207,11 @@ class CalibrationCache:
                 if isinstance(entries, dict):
                     store.update({str(k): float(v)
                                   for k, v in entries.items()})
+            tuned = blob.get("tuned", {})
+            if isinstance(tuned, dict):
+                self._tuned.update({str(k): dict(v)
+                                    for k, v in tuned.items()
+                                    if isinstance(v, dict)})
         return True
 
     def _autosave(self) -> None:

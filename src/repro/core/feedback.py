@@ -102,16 +102,22 @@ class OnlineFeedback:
     def timed_chunk_fn(self, fn: Callable[[Any], Any]) -> Callable[[Any], Any]:
         """Wrap a *tagged* bulk chunk thunk: time each call, attribute
         ``chunk.size`` elements to its workload key.  Untagged thunks
-        pass through untouched."""
+        pass through untouched, and so does any individual call whose
+        chunk object carries no ``.size``: attributing a default element
+        count (e.g. 1) would divide real seconds by a fake denominator
+        and poison the smoothed per-element time for every later
+        decision on that key."""
         key = workload_key_of(fn)
         if key is None:
             return fn
 
         def timed(chunk):
+            size = getattr(chunk, "size", None)
+            if size is None:
+                return fn(chunk)
             t = time.perf_counter()
             out = fn(chunk)
-            self.observe(key, getattr(chunk, "size", 1),
-                         time.perf_counter() - t)
+            self.observe(key, size, time.perf_counter() - t)
             return out
 
         timed.__name__ = getattr(fn, "__name__", "chunk_fn")

@@ -1,12 +1,14 @@
 """Pallas TPU kernels for the perf-critical compute hot spots, with
-adaptive (acc-model) block tiling.  Validated in interpret mode on CPU
-against the pure-jnp oracles in ref.py."""
-from . import ops, ref, tuning
+adaptive (acc-model) block tiling — static analytic plans (tuning.py)
+or measured, persisted winners (autotune.py).  Validated in interpret
+mode on CPU against the pure-jnp oracles in ref.py."""
+from . import autotune, ops, ref, tuning
+from .autotune import KernelTuner
 from .ops import (adjacent_difference, artificial_work, flash_attention,
                   inclusive_scan, reduce_sum, rmsnorm)
 
 __all__ = [
-    "ops", "ref", "tuning",
+    "autotune", "ops", "ref", "tuning", "KernelTuner",
     "adjacent_difference", "artificial_work", "flash_attention",
     "inclusive_scan", "reduce_sum", "rmsnorm",
 ]

@@ -96,6 +96,7 @@ def flash_attention_pallas(
     scale: float | None = None, kv_len: int | None = None,
     sq_true: int | None = None,
     block_q: int = 128, block_kv: int = 128,
+    plan: tuple[int, int] | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D), Hq % Hkv == 0.
@@ -103,7 +104,12 @@ def flash_attention_pallas(
     Sq/Skv must be multiples of the block sizes.  ops.py pads and passes
     ``kv_len`` = true kv length (padding keys masked) and ``sq_true`` =
     true q length, so real q rows keep end-aligned positions
-    (row r ↦ global position r + kv_len - sq_true)."""
+    (row r ↦ global position r + kv_len - sq_true).  An externally-chosen
+    ``plan`` — a (block_q, block_kv) pair, e.g. a measured winner from
+    ``autotune.KernelTuner.plan_attention`` — overrides the block
+    arguments."""
+    if plan is not None:
+        block_q, block_kv = plan
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)

@@ -21,8 +21,13 @@ def _reduce_kernel(x_ref, o_ref):
         o_ref.dtype)
 
 
-def reduce_sum_pallas(x: jax.Array, *, block: int,
+def reduce_sum_pallas(x: jax.Array, *, block: int | None = None, plan=None,
                       interpret: bool = True) -> jax.Array:
+    """``block`` or an externally-chosen ``plan`` (``tuning.BlockPlan``,
+    e.g. an ``autotune.KernelTuner`` winner) sets the grid step."""
+    if plan is not None:
+        block = plan.block
+    assert block is not None, "need block= or plan="
     n = x.shape[0]
     assert n % block == 0, (n, block)
     grid = n // block
@@ -49,8 +54,13 @@ def _scan_offset_kernel(scan_ref, off_ref, o_ref):
                   + off_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-def inclusive_scan_pallas(x: jax.Array, *, block: int,
-                          interpret: bool = True) -> jax.Array:
+def inclusive_scan_pallas(x: jax.Array, *, block: int | None = None,
+                          plan=None, interpret: bool = True) -> jax.Array:
+    """``block`` or an externally-chosen ``plan`` sets the grid step (see
+    ``reduce_sum_pallas``)."""
+    if plan is not None:
+        block = plan.block
+    assert block is not None, "need block= or plan="
     n = x.shape[0]
     assert n % block == 0, (n, block)
     grid = n // block

@@ -17,9 +17,14 @@ def _kernel(x_ref, g_ref, o_ref, *, eps: float):
 
 
 def rmsnorm_pallas(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
-                   block_rows: int = 128, interpret: bool = True) -> jax.Array:
+                   block_rows: int = 128, plan=None,
+                   interpret: bool = True) -> jax.Array:
     """x: (rows, d); gamma: (d,).  rows must divide by block_rows
-    (ops.py pads)."""
+    (ops.py pads).  An externally-chosen ``plan`` (a ``tuning.BlockPlan``,
+    e.g. a measured winner from ``autotune.KernelTuner``) overrides
+    ``block_rows``."""
+    if plan is not None:
+        block_rows = plan.block
     rows, d = x.shape
     assert rows % block_rows == 0, (rows, block_rows)
     return pl.pallas_call(

@@ -30,15 +30,31 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def round_down(x: int, m: int) -> int:
-    return max((x // m) * m, m)
-
-
 @dataclasses.dataclass(frozen=True)
 class BlockPlan:
     block: int          # elements per grid step (1-d kernels)
     grid: int           # number of grid steps
     padded: int         # padded array length (block * grid)
+
+
+def max_block_1d(*, bytes_per_elem: int, arrays_in_vmem: int,
+                 hw: HardwareSpec = TPU_V5E, align: int = LANE,
+                 vmem_fraction: float = 0.25) -> int:
+    """Largest legal 1-d block under the double-buffered VMEM budget,
+    floored at one tile.  The single budget model shared by the analytic
+    planner below and the measured autotuner's candidate filter
+    (autotune.py): budget = vmem * fraction / (2 * live arrays)."""
+    budget = hw.vmem_bytes * vmem_fraction / (2.0 * arrays_in_vmem)
+    return max((int(budget // bytes_per_elem) // align) * align, align)
+
+
+def attention_live_bytes(bq: int, bk: int, d: int,
+                         bytes_per_elem: int) -> int:
+    """VMEM live set of one flash-attention grid step: q, k, v and the
+    score tile in the kernel dtype plus the f32 accumulator.  Shared by
+    ``plan_attention`` and the autotuner's candidate filter."""
+    return (2 * bq * d + 2 * bk * d + bq * bk) * bytes_per_elem \
+        + bq * d * 4
 
 
 def plan_1d(n: int, *, bytes_per_elem: int = 4,
@@ -54,12 +70,16 @@ def plan_1d(n: int, *, bytes_per_elem: int = 4,
     buffering fits: budget = vmem * fraction / (2 * arrays).
     """
     n = max(int(n), 1)
-    budget_bytes = hw.vmem_bytes * vmem_fraction / (2.0 * arrays_in_vmem)
-    max_block = round_down(int(budget_bytes // bytes_per_elem), LANE)
-    min_block = LANE * SUBLANE
+    max_block = max_block_1d(bytes_per_elem=bytes_per_elem,
+                             arrays_in_vmem=arrays_in_vmem, hw=hw,
+                             vmem_fraction=vmem_fraction)
+    # A small budget can push max_block below the preferred minimum; the
+    # VMEM budget is the hard constraint, so the minimum shrinks (down to
+    # one LANE tile) rather than the block exceeding the budget.
+    min_block = min(LANE * SUBLANE, max_block)
     target = round_up(math.ceil(n / chunks_per_core), LANE)
     block = max(min(target, max_block), min_block)
-    block = min(block, round_up(n, LANE))
+    block = min(block, round_up(n, LANE), max_block)
     grid = math.ceil(n / block)
     return BlockPlan(block=block, grid=grid, padded=block * grid)
 
@@ -79,9 +99,7 @@ def plan_attention(sq: int, skv: int, d: int, *,
     while bq > SUBLANE:
         bk = min(1024, round_up(min(skv, 1024), LANE))
         while bk >= LANE:
-            live = (2 * bq * d + 2 * bk * d + bq * bk) * bytes_per_elem \
-                + bq * d * 4  # f32 accumulator
-            if live <= budget:
+            if attention_live_bytes(bq, bk, d, bytes_per_elem) <= budget:
                 return min(bq, round_up(sq, SUBLANE)), min(bk, round_up(skv, LANE))
             bk //= 2
         bq //= 2

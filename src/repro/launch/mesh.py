@@ -12,11 +12,24 @@ import jax
 import numpy as np
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    ``jax.sharding.AxisType`` (and make_mesh's ``axis_types=``) only
+    exist from jax 0.5; 0.4.x builds the mesh without them — every axis
+    is Auto there anyway, which is exactly what we'd request.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):

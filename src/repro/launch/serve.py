@@ -26,14 +26,14 @@ from ..models import lm
 from ..serve import ServeEngine, ServeScheduler, percentile
 
 
-def serve_cross_attention(cfg, params, args, executor) -> None:
+def serve_cross_attention(cfg, params, args, executor, tuner=None) -> None:
     """Cross-attention (VLM) archs carry per-request frontend feats the
     scheduler does not model — they serve through the engine's lock-step
-    batch path instead."""
+    batch path instead (kernel tuning applies there too)."""
     batch = make_batch(cfg, args.requests, args.prompt_len, kind="prefill")
     engine = ServeEngine(cfg, params, batch=args.requests,
                          max_len=args.prompt_len + args.new_tokens + 1,
-                         executor=executor)
+                         executor=executor, kernel_tuner=tuner)
     t0 = time.monotonic()
     out = engine.generate(batch["tokens"], args.new_tokens,
                           frontend_feats=batch.get("frontend_feats"))
@@ -58,6 +58,9 @@ def main() -> None:
     ap.add_argument("--cal-cache-dir", default=None,
                     help="calibration cache dir (default: "
                          "$REPRO_CAL_CACHE_DIR or ~/.cache/repro-acc)")
+    ap.add_argument("--kernel-autotune", action="store_true",
+                    help="measured Pallas blocks for prefill/decode "
+                         "(winners persist in the calibration cache)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -69,12 +72,20 @@ def main() -> None:
         else CalibrationCache.persistent(args.cal_cache_dir)
     acc = AdaptiveCoreChunk(cache=cache)
     executor = adaptive(SequentialExecutor(), acc)
+    tuner = None
+    if args.kernel_autotune:
+        from ..train.autotune import make_kernel_tuner
+
+        tuner = make_kernel_tuner(cache)   # shared store with acc/train
     if "cross_attn" in cfg.layer_kinds():
-        serve_cross_attention(cfg, params, args, executor)
+        serve_cross_attention(cfg, params, args, executor, tuner)
+        if tuner is not None:
+            print(f"kernel autotune: {tuner.searches} measured searches, "
+                  f"{tuner.cache_hits} persisted winners reused")
         return
     max_len = args.prompt_len + args.new_tokens + 1
     sched = ServeScheduler(cfg, params, n_slots=args.slots, max_len=max_len,
-                           executor=executor)
+                           executor=executor, kernel_tuner=tuner)
     sched.warmup()
 
     # Jittered prompt lengths: requests join and leave the batch at
@@ -102,6 +113,9 @@ def main() -> None:
           f"p95={percentile(lats, 95) * 1e3:.0f}ms | "
           f"ttft p50={percentile(ttfts, 50) * 1e3:.0f}ms")
     print("sample:", outs[rids[0]])
+    if tuner is not None:
+        print(f"kernel autotune: {tuner.searches} measured searches, "
+              f"{tuner.cache_hits} persisted winners reused")
     if not args.no_cal_cache:
         cache.save()   # flush any write-throttled smoothing updates
         print(f"calibration cache: {cache.path} ({len(cache)} entries)")

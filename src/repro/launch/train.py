@@ -46,6 +46,10 @@ def main() -> None:
     ap.add_argument("--cal-cache-dir", default=None,
                     help="calibration cache dir (default: "
                          "$REPRO_CAL_CACHE_DIR or ~/.cache/repro-acc)")
+    ap.add_argument("--kernel-autotune", action="store_true",
+                    help="measured Pallas blocks for model-layer kernels "
+                         "(winners persist in the calibration cache, "
+                         "shared with serving)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -57,16 +61,20 @@ def main() -> None:
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
           f"devices={len(jax.devices())}")
 
+    # One in-memory cache view per process: save() rewrites the whole
+    # file, so two views over one path would clobber each other's writes.
+    from ..core.calibration import CalibrationCache
+
+    cache = CalibrationCache() if args.no_cal_cache \
+        else CalibrationCache.persistent(args.cal_cache_dir)
+
     accum = args.accum
     if accum is None:
         # acc decision over this host's devices
         from ..configs.base import ShapeConfig
         from ..core.acc import AdaptiveCoreChunk
-        from ..core.calibration import CalibrationCache
         from ..train.autotune import choose_plan
 
-        cache = CalibrationCache() if args.no_cal_cache \
-            else CalibrationCache.persistent(args.cal_cache_dir)
         mesh = mesh_lib.make_host_mesh()
         # acc rides on the executor; calibrations persist across runs
         mexec = adaptive(MeshExecutor(mesh), AdaptiveCoreChunk(cache=cache))
@@ -78,6 +86,13 @@ def main() -> None:
 
     opt_cfg = AdamWConfig(lr=args.lr)
     opt_state = adamw.init_state(params)
+    if args.kernel_autotune:
+        from ..models import flags
+        from ..train.autotune import make_kernel_tuner
+
+        # Global flag, read at jit-trace time: the one compiled train
+        # step bakes in the measured blocks (same store serving reads).
+        flags.KERNEL_TUNER = make_kernel_tuner(cache)
     step_fn = jax.jit(make_train_step(cfg, opt_cfg, accum=accum, remat=True))
 
     def data_iter():

@@ -106,9 +106,14 @@ def sdpa(q, k, v, *, impl: str = "chunked", causal: bool = True,
         return jnp.broadcast_to(vbar, q.shape) + 0 * q
     if impl == "flash":
         # Pallas kernel needs static kv_len; only full (non-cache) path.
+        # With a tuner flagged on (--kernel-autotune) the (block_q,
+        # block_kv) tile is a measured winner instead of the analytic
+        # plan_attention prior.
         assert kv_len is None or isinstance(kv_len, int)
+        from . import flags
+
         return kops.flash_attention(q, k, v, causal=causal, window=window,
-                                    scale=scale)
+                                    scale=scale, tuner=flags.KERNEL_TUNER)
     if impl == "naive":
         assert kv_len is None or isinstance(kv_len, int)
         return kref.attention_ref(q, k, v, causal=causal, window=window,

@@ -47,6 +47,15 @@ def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
 
 
 def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    from . import flags
+
+    if flags.KERNEL_TUNER is not None:
+        # Opt-in (--kernel-autotune): the fused Pallas kernel on measured
+        # row blocks.  Import here — kernels must stay importable without
+        # the model layer and vice versa.
+        from ..kernels import ops as kops
+
+        return kops.rmsnorm(x, p["g"], eps=eps, tuner=flags.KERNEL_TUNER)
     xf = x.astype(jnp.float32)
     rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
     return ((xf * rms) * p["g"].astype(jnp.float32)).astype(x.dtype)

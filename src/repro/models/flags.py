@@ -20,6 +20,13 @@ UNROLL_FOR_ACCOUNTING = False
 # weight-gather resolution.  Set by the launch layer around trace time.
 ACT_SHARDING = None
 
+# Measured Pallas block autotuner (kernels/autotune.KernelTuner) or None.
+# When set, model-layer norms and the flash-attention path run on the
+# Pallas kernels with measured block plans instead of analytic defaults.
+# Read at trace time: the serve/train launchers set it around their jit
+# traces (--kernel-autotune), so compiled steps bake the tuned blocks in.
+KERNEL_TUNER = None
+
 # MoE dispatch locality: number of token groups (= data-axis extent).
 # None/1 = global dispatch (baseline: capacity positions via a cumsum
 # over the GLOBAL token axis — GSPMD turns the scatter into full-buffer
@@ -48,6 +55,17 @@ def activation_sharding(named_sharding):
         yield
     finally:
         ACT_SHARDING = prev
+
+
+@contextlib.contextmanager
+def kernel_tuner(tuner):
+    global KERNEL_TUNER
+    prev = KERNEL_TUNER
+    KERNEL_TUNER = tuner
+    try:
+        yield
+    finally:
+        KERNEL_TUNER = prev
 
 
 @contextlib.contextmanager

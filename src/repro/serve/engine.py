@@ -23,7 +23,7 @@ from ..core.acc import AdaptiveCoreChunk
 from ..core.executor import SequentialExecutor
 from ..core.future import Future
 from ..core.properties import params_of
-from ..models import lm
+from ..models import flags, lm
 
 
 def prefill_segments(s: int, chunk: int, *, pos: int = 0,
@@ -52,14 +52,19 @@ def prefill_segments(s: int, chunk: int, *, pos: int = 0,
     return segs
 
 
-def make_decode_step(cfg: ArchConfig, *, window: int | None = None
-                     ) -> Callable:
-    """(params, caches, tokens (B,1), pos) → (logits (B,1,V), caches)."""
+def make_decode_step(cfg: ArchConfig, *, window: int | None = None,
+                     kernel_tuner=None) -> Callable:
+    """(params, caches, tokens (B,1), pos) → (logits (B,1,V), caches).
+
+    ``kernel_tuner`` (an ``autotune.KernelTuner``) is applied around the
+    forward at trace time, so the compiled step bakes in measured Pallas
+    blocks."""
 
     def decode_step(params, caches, tokens, pos, frontend_feats=None):
-        return lm.forward_cached(params, tokens, caches, pos, cfg,
-                                 window=window,
-                                 frontend_feats=frontend_feats)
+        with flags.kernel_tuner(kernel_tuner or flags.KERNEL_TUNER):
+            return lm.forward_cached(params, tokens, caches, pos, cfg,
+                                     window=window,
+                                     frontend_feats=frontend_feats)
 
     return decode_step
 
@@ -88,7 +93,7 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch: int, max_len: int,
                  window: int | None = None,
                  acc: AdaptiveCoreChunk | None = None,
-                 executor=None):
+                 executor=None, kernel_tuner=None):
         self.cfg = cfg
         self.params = params
         self.window = window if window is not None else cfg.attn_window
@@ -101,7 +106,11 @@ class ServeEngine:
         self.executor = executor if executor is not None \
             else SequentialExecutor()
         self.acc = acc or params_of(self.executor) or AdaptiveCoreChunk()
-        self._decode = jax.jit(make_decode_step(cfg, window=self.window))
+        # Opt-in measured Pallas blocks for prefill/decode (tentpole
+        # feedback loop); None keeps the analytic/jnp paths untouched.
+        self.kernel_tuner = kernel_tuner
+        self._decode = jax.jit(make_decode_step(
+            cfg, window=self.window, kernel_tuner=kernel_tuner))
         self._sched = None   # lazily built, reused across generate() calls
 
     @property
@@ -140,9 +149,11 @@ class ServeEngine:
 
             def run(state):
                 _, caches, pos = state
-                logits, caches = lm.forward_cached(
-                    self.params, piece, caches, pos, self.cfg,
-                    window=self.window, frontend_feats=frontend_feats)
+                with flags.kernel_tuner(self.kernel_tuner
+                                        or flags.KERNEL_TUNER):
+                    logits, caches = lm.forward_cached(
+                        self.params, piece, caches, pos, self.cfg,
+                        window=self.window, frontend_feats=frontend_feats)
                 return logits, caches, pos + step
 
             return run
@@ -183,7 +194,8 @@ class ServeEngine:
         if self._sched is None or self._sched.pool.n_slots < bsz:
             self._sched = ServeScheduler(
                 self.cfg, self.params, n_slots=bsz, max_len=self.max_len,
-                window=self.window, executor=self.executor, acc=self.acc)
+                window=self.window, executor=self.executor, acc=self.acc,
+                kernel_tuner=self.kernel_tuner)
         rids = [self._sched.submit(prompt[i], max_new_tokens=n_new)
                 for i in range(bsz)]
         outs = self._sched.run_until_idle()

@@ -49,7 +49,7 @@ from ..core.executor import Chunk, SequentialExecutor
 from ..core.feedback import tag_workload
 from ..core.future import Future, when_all
 from ..core.properties import params_of
-from ..models import lm
+from ..models import flags, lm
 from ..train.autotune import serve_profiles
 from .kv_cache import SlotKVCachePool
 
@@ -118,7 +118,8 @@ class ServeScheduler:
                  max_len: int, window: int | None = None,
                  executor=None, acc: AdaptiveCoreChunk | None = None,
                  chunk_buckets: Sequence[int] = DEFAULT_CHUNK_BUCKETS,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 kernel_tuner=None):
         kinds = set(cfg.layer_kinds())
         if "cross_attn" in kinds:
             raise ValueError(
@@ -134,6 +135,12 @@ class ServeScheduler:
         self.executor = executor if executor is not None \
             else SequentialExecutor()
         self.acc = acc or params_of(self.executor) or AdaptiveCoreChunk()
+        # Measured Pallas blocks for the compiled prefill/decode steps
+        # (kernels/autotune.KernelTuner); None = analytic/jnp paths.  The
+        # tuner runs at jit-trace time, so each compiled shape pays at
+        # most one candidate search — and none when the winner is already
+        # persisted in the calibration store.
+        self.kernel_tuner = kernel_tuner
         self.pool = SlotKVCachePool(cfg, n_slots, max_len,
                                     window=self.window)
         self.clock = clock
@@ -326,9 +333,11 @@ class ServeScheduler:
             cfg, window = self.cfg, self.window
 
             def prefill_chunk(params, row_caches, piece, pos, last):
-                return lm.forward_cached(params, piece, row_caches, pos,
-                                         cfg, window=window,
-                                         logit_index=last)
+                with flags.kernel_tuner(self.kernel_tuner
+                                        or flags.KERNEL_TUNER):
+                    return lm.forward_cached(params, piece, row_caches, pos,
+                                             cfg, window=window,
+                                             logit_index=last)
 
             fn = jax.jit(prefill_chunk)
             self._prefill_jit[length] = fn
@@ -400,9 +409,11 @@ class ServeScheduler:
                 caches = jax.tree.map(
                     lambda x: None if x is None else x[None], row_caches,
                     is_leaf=lambda x: x is None)
-                logits, new = lm.forward_cached(
-                    params, tok[None, None], caches, pos, cfg,
-                    window=window)
+                with flags.kernel_tuner(self.kernel_tuner
+                                        or flags.KERNEL_TUNER):
+                    logits, new = lm.forward_cached(
+                        params, tok[None, None], caches, pos, cfg,
+                        window=window)
                 squeezed = jax.tree.map(
                     lambda x: None if x is None else x[0], new,
                     is_leaf=lambda x: x is None)

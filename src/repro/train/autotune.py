@@ -18,10 +18,29 @@ import math
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.acc import AdaptiveCoreChunk
+from ..core.calibration import CalibrationCache
 from ..core.cost_model import WorkloadProfile
 from ..core.executor import Executor
 from ..core.overhead_law import AccDecision
 from ..core.properties import params_of
+from ..kernels.autotune import KernelTuner
+
+
+def make_kernel_tuner(cache: CalibrationCache | None = None,
+                      **kw) -> KernelTuner:
+    """The process's measured Pallas block tuner, bound to the same
+    calibration store the acc decisions read.
+
+    Training and serving both build their tuner here (launch/train and
+    launch/serve ``--kernel-autotune``): winner keys are
+    ``(kernel, shape-bucket, dtype)`` + the hardware key — workload-free
+    — so a block tuned while training is reused when the serving path
+    later hits the same kernel shape, and vice versa.  One store, one
+    search per (kernel, shape, hardware) fleet-wide.
+    """
+    if cache is None:
+        cache = CalibrationCache.persistent()
+    return KernelTuner(cache, **kw)
 
 
 def token_profile(cfg: ArchConfig, *, training: bool = True) -> WorkloadProfile:

@@ -10,9 +10,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import par, MeshExecutor, StaticCoreChunk, AdaptiveCoreChunk
+from repro.launch.mesh import make_mesh
 from repro import algorithms as alg
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 pol = par.on(MeshExecutor(mesh)).with_(StaticCoreChunk(cores=8))
 x = jnp.asarray(np.random.RandomState(1).rand(1003).astype(np.float32))
 xs = np.asarray(x)
@@ -46,12 +47,13 @@ from repro.optim import AdamWConfig, adamw
 from repro.train import (make_train_step, make_compressed_dp_train_step,
                          init_error_feedback)
 from repro.data import make_batch
+from repro.launch.mesh import make_mesh
 
 cfg = get_config("qwen3-0.6b").reduced()
 params = init_params(jax.random.PRNGKey(0), cfg)
 opt_cfg = AdamWConfig(lr=1e-3)
 opt = adamw.init_state(params)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 batch = make_batch(cfg, 8, 32, kind="train", seed=0)
 
 step_c = make_compressed_dp_train_step(cfg, opt_cfg, mesh)
@@ -99,6 +101,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp, functools
 from repro.configs import get_config, base
 from repro.launch import sharding
+from repro.launch.mesh import make_mesh
 from repro.models import lm, flags
 from repro.optim import adamw, AdamWConfig
 from repro.train import make_train_step
@@ -106,8 +109,7 @@ from repro.data import make_batch, input_specs
 from repro.analysis import roofline
 
 # a reduced arch on a small (4,2) mesh: lower+compile+RUN one step
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = get_config("mixtral-8x22b").reduced()
 params = lm.init_params(jax.random.PRNGKey(0), cfg)
 opt = adamw.init_state(params)
