@@ -7,13 +7,17 @@ Each function returns a list of CSV rows: name,us_per_call,derived.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import (ADJACENT_DIFFERENCE, EPYC_48, INTEL_SKYLAKE_40C,
-                        SKYLAKE_40, AMD_EPYC_48C, HostParallelExecutor,
-                        artificial_work, t_iter_analytic)
+from repro.core import (ADJACENT_DIFFERENCE, AMD_EPYC_48C, EPYC_48,
+                        INTEL_SKYLAKE_40C, SKYLAKE_40,
+                        HostParallelExecutor, artificial_work,
+                        t_iter_analytic)
 from repro.core import overhead_law as ol
 from repro.core.calibration import measure_t0_empty_task
+from repro.core.model import AnalyticOverheadLaw
+
+# The ExecutionModel's analytic prior policy — the figure baselines ask
+# it directly (SimMachine sweeps need no cache/trace/engine state).
+PRIOR = AnalyticOverheadLaw()
 
 SIZES = [2 ** k for k in range(10, 25)]
 T_MEM = t_iter_analytic(ADJACENT_DIFFERENCE, INTEL_SKYLAKE_40C)
@@ -23,8 +27,8 @@ T_CPU_AMD = t_iter_analytic(artificial_work(256), AMD_EPYC_48C)
 
 def _acc_time(m, t_iter, n):
     # T0 calibrated by the empty-task benchmark at full region width
-    d = ol.decide(t_iter=t_iter, n_elements=n, t0=m.t0_for(m.cores),
-                  max_cores=m.cores)
+    d = PRIOR.decide(t_iter=t_iter, count=n, t0=m.t0_for(m.cores),
+                     max_cores=m.cores)
     return m.run_decision(d), d
 
 

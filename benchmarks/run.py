@@ -19,7 +19,8 @@ def main() -> None:
     from . import executor_overhead, figures
 
     suites = [
-        ("executor API v2 overhead (empty tasks)",
+        ("executor API v2 + decision-engine overhead (empty tasks; "
+         "writes BENCH_decision_engine.json)",
          executor_overhead.bench_executor_overhead),
         ("fig1 (chunks/core sweep)", figures.fig1_chunks_per_core),
         ("fig2 (adjacent-difference, static vs acc)",

@@ -6,7 +6,9 @@ the paper's 40-core Skylake; see DESIGN.md §2 for why simulated).
 """
 from repro.core import (ADJACENT_DIFFERENCE, INTEL_SKYLAKE_40C, SKYLAKE_40,
                         artificial_work, t_iter_analytic)
-from repro.core import overhead_law as ol
+from repro.core.model import AnalyticOverheadLaw
+
+PRIOR = AnalyticOverheadLaw()   # the ExecutionModel's analytic prior
 
 SIZES = [2 ** k for k in range(10, 25, 2)]
 
@@ -20,8 +22,8 @@ def curve(t_iter, label, sat=None):
                                       chunks_per_core=4,
                                       saturation_cores=sat)
                    for c in (1, 4, 16, 40)]
-        d = ol.decide(t_iter=t_iter, n_elements=n,
-                      t0=SKYLAKE_40.t0_for(40), max_cores=40)
+        d = PRIOR.decide(t_iter=t_iter, count=n,
+                         t0=SKYLAKE_40.t0_for(40), max_cores=40)
         s_acc = t_iter * n / SKYLAKE_40.run_decision(d, saturation_cores=sat)
         marker = "*" if s_acc >= max(statics) * 0.99 else " "
         print(f"{n:>10} | " + " ".join(f"{s:7.2f}" for s in statics)

@@ -21,7 +21,7 @@ executor's ``params`` annotation — that second step is what makes
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,11 @@ from ..core.executor import (Chunk, MeshExecutor, SequentialExecutor,
                              make_chunks, mesh_executor_of)
 from ..core.future import when_all
 from ..core.policy import ExecutionPolicy
+
+__all__ = ["Plan", "plan", "measured_body", "run_map_chunks",
+           "run_reduce_chunks", "mesh_executor_of", "submesh_1d",
+           "pad_to", "mesh_map", "mesh_map_with_left_halo", "mesh_scan",
+           "mesh_reduce", "shard_map"]
 
 # jax.shard_map landed in 0.4.35 as experimental and moved to the top
 # level later; support both spellings.  Public: the algorithm modules (and
@@ -59,12 +64,19 @@ class Plan:
 def plan(policy: ExecutionPolicy, count: int,
          body: Callable[[int, int], Any] | Any = None,
          key: Any = None) -> Plan:
-    """Run the three customization points and build the chunk list."""
+    """Run the three customization points and build the chunk list.
+
+    The key (explicit, or derived from an analytic profile's name)
+    labels the decision in the ExecutionModel trace and is where online
+    feedback for this workload accumulates."""
     executor = policy.resolve_executor()
     params = policy.resolve_params(executor)
     if not policy.allows_parallel or count <= 1:
         return Plan(SequentialExecutor(), params, 0.0, 1, max(count, 1),
                     make_chunks(count, max(count, 1)))
+    if key is None and getattr(body, "name", None) is not None \
+            and not callable(body):
+        key = ("algorithm", body.name)   # WorkloadProfile-style bodies
     kw = {"key": key} if (key is not None and params is not None
                           and hasattr(params, "measure_iteration")) else {}
     t_iter = cp.measure_iteration(params, executor, body, count, **kw)

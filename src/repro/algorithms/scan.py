@@ -25,7 +25,6 @@ def _assoc_scan(op, c):
 
 def inclusive_scan(policy, x: jax.Array, op: Callable = jnp.add) -> jax.Array:
     local = jax.jit(lambda c: _assoc_scan(op, c))
-    total = jax.jit(lambda c: _assoc_scan(op, c)[-1])
     combine = jax.jit(lambda c, off: op(off, c))
 
     body = detail.measured_body(local, x)

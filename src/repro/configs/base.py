@@ -8,7 +8,6 @@ presets.  ``reduced()`` produces the CPU-smoke-test variant of any arch
 from __future__ import annotations
 
 import dataclasses
-import math
 
 
 @dataclasses.dataclass(frozen=True)

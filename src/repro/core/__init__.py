@@ -1,6 +1,9 @@
 """Core: the paper's adaptive core/chunk execution model for JAX.
 
 Public surface:
+  - ExecutionModel (core/model.py): the unified decide→execute→observe→
+    refine engine with the typed Decision IR (DecisionKey / Decision /
+    DecisionTrace) and pluggable policies
   - overhead_law: Eqs 1-10 as pure functions + AccDecision
   - AdaptiveCoreChunk (acc), StaticCoreChunk: execution-parameters objects
   - customization points: measure_iteration, processing_units_count,
@@ -11,12 +14,11 @@ Public surface:
   - executor properties: prefer/require, with_priority/with_hint/with_params
   - hardware specs + analytic cost model + SimMachine
 """
-from . import (calibration, cost_model, customization, feedback,
+from . import (calibration, cost_model, customization, feedback, model,
                overhead_law, properties)
 from .acc import AdaptiveCoreChunk, StaticCoreChunk
 from .adaptive import AdaptiveExecutor, adaptive
 from .calibration import CalibrationCache
-from .feedback import OnlineFeedback, tag_workload
 from .cost_model import (ADJACENT_DIFFERENCE, WorkloadProfile,
                          artificial_work, t0_analytic, t_iter_analytic)
 from .customization import (get_chunk_size, measure_iteration,
@@ -24,9 +26,12 @@ from .customization import (get_chunk_size, measure_iteration,
 from .executor import (Chunk, Executor, ExecutorBase, HostParallelExecutor,
                        MeshExecutor, SequentialExecutor, UnsupportedOperation,
                        make_chunks, mesh_executor_of, unwrap_executor)
+from .feedback import OnlineFeedback, tag_workload
 from .future import Future, when_all
 from .hardware import (AMD_EPYC_48C, INTEL_SKYLAKE_40C, TPU_V5E,
                        HardwareSpec, this_host)
+from .model import (Decision, DecisionKey, DecisionTrace, ExecutionModel,
+                    hardware_key)
 from .overhead_law import AccDecision, decide
 from .policy import ExecutionPolicy, par, par_unseq, seq, unseq
 from .properties import (ExecutorAnnotations, ExecutorProperty,
@@ -36,7 +41,9 @@ from .simmachine import EPYC_48, SKYLAKE_40, SimMachine
 
 __all__ = [
     "overhead_law", "customization", "calibration", "cost_model",
-    "properties", "feedback",
+    "properties", "feedback", "model",
+    "ExecutionModel", "Decision", "DecisionKey", "DecisionTrace",
+    "hardware_key",
     "CalibrationCache", "OnlineFeedback", "tag_workload",
     "AdaptiveCoreChunk", "StaticCoreChunk", "AccDecision", "decide",
     "measure_iteration", "processing_units_count", "get_chunk_size",

@@ -12,17 +12,23 @@ core/customization.py for the dispatch rule):
 ``decide`` exposes the full decision record for the training loop, the
 serving engine, and the Pallas tuner, which need more than the three
 scalar answers.
+
+Since the ExecutionModel unification (core/model.py) this object is a
+*front-end*: it gathers the runtime metrics (T0, t_iter) and asks the
+engine bound to its calibration cache for the decision, so every
+core/chunk choice lands in one explainable trace with provenance.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Hashable
+from typing import Any, Hashable
 
 from . import calibration, overhead_law
 from .cost_model import WorkloadProfile, t0_analytic, t_iter_analytic
 from .executor import Executor, mesh_executor_of
 from .hardware import TPU_V5E, HardwareSpec
+from .model import DecisionKey, ExecutionModel
 
 
 @dataclasses.dataclass
@@ -35,6 +41,21 @@ class AdaptiveCoreChunk:
     t0_override: float | None = None      # tests / reproducibility
     cache: calibration.CalibrationCache = dataclasses.field(
         default_factory=calibration.CalibrationCache)
+    # The workload key most recently passed to measure_iteration: the
+    # paper's call sequence (measure → units → chunk) runs the three
+    # customization points back-to-back with fixed signatures, so the
+    # key seen at measurement time is stashed here to label the decision
+    # in the engine trace.  Single decision loop per acc object by
+    # construction (scheduler tick / plan() call); not a concurrency
+    # hazard in practice, and only trace labels ride on it.
+    _last_workload_key: Hashable | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def model(self) -> ExecutionModel:
+        """The decision engine bound to this object's calibration cache
+        (shared with the feedback layer and the kernel tuner)."""
+        return ExecutionModel.of(self.cache)
 
     # -- T0 ---------------------------------------------------------------
     def calibrate_t0(self, executor: Executor) -> float:
@@ -49,7 +70,7 @@ class AdaptiveCoreChunk:
 
         inner = unwrap_executor(executor)
         key = ("t0", type(inner).__name__, max(executor.num_units(), 1))
-        return self.cache.t0(
+        return self.model.t0(
             key, lambda: calibration.measure_t0_empty_task(executor))
 
     # -- customization point: measure_iteration ----------------------------
@@ -61,17 +82,19 @@ class AdaptiveCoreChunk:
         callable ``body(start, size)`` chunk thunk (measured path).
         Measured once per workload key, then cached (paper Section 4.2).
         """
+        self._last_workload_key = key
         if isinstance(body, WorkloadProfile):
             # Analytic seed, but online feedback wins once present: a keyed
             # profile workload whose chunks have been timed (core/feedback)
             # reads the smoothed observation instead of the roofline guess.
             if key is not None:
-                smoothed = self.cache.peek_t_iter(key)
+                smoothed = self.model.smoothed_t_iter(key)
                 if smoothed is not None:
                     return smoothed
             return t_iter_analytic(body, self.hardware)
         k = key if key is not None else ("t_iter", getattr(body, "__name__", id(body)))
-        return self.cache.t_iter(
+        self._last_workload_key = k
+        return self.model.measured_t_iter(
             k, lambda: calibration.measure_iteration_wallclock(body, count))
 
     # -- customization point: processing_units_count ------------------------
@@ -93,27 +116,29 @@ class AdaptiveCoreChunk:
         return chunk
 
     # -- full decision -------------------------------------------------------
-    def decide(self, executor: Executor, t_iter: float,
-               count: int) -> overhead_law.AccDecision:
+    def decide(self, executor: Executor, t_iter: float, count: int,
+               key: Hashable | None = None,
+               evidence: tuple = ()) -> overhead_law.AccDecision:
+        """The full Overhead-Law decision, made by the ExecutionModel
+        engine (one trace entry per call).  ``key`` labels the trace
+        entry; without one, the key stashed by the most recent
+        ``measure_iteration`` call — the paper's call sequence — or a
+        generic algorithm key is used.  ``evidence`` lists extra
+        workload keys whose calibrations fed ``t_iter``."""
         t0 = self.calibrate_t0(executor)
         max_cores = max(executor.num_units(), 1)
-        d = overhead_law.decide(
-            t_iter=t_iter, n_elements=count, t0=t0, max_cores=max_cores,
-            eff=self.efficiency, chunks_per_core=self.chunks_per_core)
         mexec = mesh_executor_of(executor)
-        if mexec is not None and d.n_cores > 1:
+        if key is None:
+            key = self._last_workload_key
+        dkey = (DecisionKey.wrap(key) if key is not None
+                else DecisionKey("algorithm", (count,)))
+        decision = self.model.cores_chunk(
+            dkey, t_iter=t_iter, count=count, t0=t0, max_cores=max_cores,
+            eff=self.efficiency, chunks_per_core=self.chunks_per_core,
             # Mesh shardings need a divisor of the data extent.
-            cores = mexec.submesh_size(d.n_cores)
-            if cores != d.n_cores:
-                chunk = overhead_law.chunk_size(count, cores, self.chunks_per_core)
-                d = dataclasses.replace(
-                    d, n_cores=cores, chunk_elems=chunk,
-                    n_chunks=math.ceil(count / chunk),
-                    predicted_time=overhead_law.predicted_time(d.t1, cores, t0),
-                    predicted_speedup=overhead_law.speedup(d.t1, cores, t0),
-                    predicted_efficiency=overhead_law.efficiency(d.t1, cores, t0),
-                )
-        return d
+            snap_cores=mexec.submesh_size if mexec is not None else None,
+            evidence=evidence)
+        return decision.acc
 
     def decide_for_profile(self, executor: Executor, profile: WorkloadProfile,
                            count: int, key: Hashable | None = None
@@ -122,7 +147,7 @@ class AdaptiveCoreChunk:
         online-feedback timings (if any) override the roofline estimate."""
         return self.decide(
             executor, self.measure_iteration(executor, profile, count,
-                                             key=key), count)
+                                             key=key), count, key=key)
 
 
 @dataclasses.dataclass

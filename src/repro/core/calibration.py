@@ -25,8 +25,20 @@ Two additions beyond the paper's one-shot scheme:
   autotuner (kernels/autotune.py) persists its measured winners — small
   JSON dicts, not scalars — through the same store, so kernel tuning,
   T0 and t_iter share one file, one schema version and one atomic
-  writer.  Schema v2 added this table; v1 files still load (the table
-  is additive), files are always written as v2.
+  writer.  Schema v2 added this table.
+
+Schema v3 (current) unifies the three key conventions into **one
+entries table**: each persisted key maps to a typed record carrying
+whichever quantities exist for it (``t0`` / ``t_iter`` / ``tuned``)
+plus its *provenance* level (``measured`` / ``online`` — the
+ExecutionModel's evidence ladder; see core/model.py).  v1 and v2 files
+still load — their per-table entries migrate into the unified form on
+the first save — and files are always written as v3.
+
+This module stays policy-free: it stores and round-trips what the
+``ExecutionModel`` engine decides.  ``smooth_t_iter`` is the EMA
+primitive the engine's online-refinement policy calls — consumers go
+through ``ExecutionModel.observe``, not this method.
 """
 from __future__ import annotations
 
@@ -40,7 +52,11 @@ from typing import Any, Callable, Hashable
 from .executor import Chunk, Executor, make_chunks
 from .future import when_all
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+# Provenance upgrade order (mirrors core/model.py, which owns the
+# semantics; duplicated as data here to keep this module import-light).
+_PROVENANCE_ORDER = ("analytic", "measured", "online")
 
 # Smoothing factor for online t_iter feedback: high enough to converge on
 # a drifted workload within a few dozen observations, low enough that one
@@ -71,6 +87,7 @@ class CalibrationCache:
         self._t_iter: dict[str, float] = {}
         self._t0: dict[str, float] = {}
         self._tuned: dict[str, dict] = {}
+        self._provenance: dict[str, str] = {}
         self._lock = threading.Lock()
         self.path = path
         if path:
@@ -140,11 +157,38 @@ class CalibrationCache:
             self._tuned[_key_str(key)] = dict(record)
         self._autosave()
 
+    # -- provenance ----------------------------------------------------------
+    def provenance(self, key: Hashable) -> str | None:
+        """The recorded evidence level for ``key`` (None: analytic-only)."""
+        return self._provenance.get(_key_str(key))
+
+    def note_provenance(self, key: Hashable, level: str) -> str:
+        """Record ``level`` for ``key``, monotone: upgrades persist,
+        downgrades are ignored (once a key has online observations it
+        never reports weaker evidence again).  Returns the level now in
+        effect."""
+        if level not in _PROVENANCE_ORDER:
+            raise ValueError(f"unknown provenance level {level!r}")
+        k = _key_str(key)
+        changed = False
+        with self._lock:
+            old = self._provenance.get(k, _PROVENANCE_ORDER[0])
+            if (_PROVENANCE_ORDER.index(level)
+                    > _PROVENANCE_ORDER.index(old)):
+                # "analytic" is the default and never stored explicitly.
+                self._provenance[k] = level
+                changed = True
+            effective = self._provenance.get(k, _PROVENANCE_ORDER[0])
+        if changed:
+            self._autosave()
+        return effective
+
     def clear(self) -> None:
         with self._lock:
             self._t_iter.clear()
             self._t0.clear()
             self._tuned.clear()
+            self._provenance.clear()
 
     def __len__(self) -> int:
         return len(self._t_iter) + len(self._t0) + len(self._tuned)
@@ -169,9 +213,19 @@ class CalibrationCache:
             raise ValueError("no path bound to this cache and none given")
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with self._lock:
-            blob = {"version": SCHEMA_VERSION,
-                    "t0": dict(self._t0), "t_iter": dict(self._t_iter),
-                    "tuned": {k: dict(v) for k, v in self._tuned.items()}}
+            # v3: one unified table — each key's record carries whichever
+            # quantities exist for it plus its provenance level.
+            entries: dict[str, dict] = {}
+            for k, v in self._t0.items():
+                entries.setdefault(k, {})["t0"] = v
+            for k, v in self._t_iter.items():
+                entries.setdefault(k, {})["t_iter"] = v
+            for k, r in self._tuned.items():
+                entries.setdefault(k, {})["tuned"] = dict(r)
+            for k, p in self._provenance.items():
+                if k in entries:
+                    entries[k]["provenance"] = p
+            blob = {"version": SCHEMA_VERSION, "entries": entries}
         # Atomic replace so a crashed writer never leaves a torn file.
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                    suffix=".tmp")
@@ -186,8 +240,12 @@ class CalibrationCache:
 
     def load(self, path: str | None = None) -> bool:
         """Merge entries from ``path``; returns True if anything loaded.
-        Missing files and version mismatches are treated as an empty cache
-        (calibration re-measures; never an error)."""
+
+        Accepts schema v1/v2 (three per-quantity tables) and v3 (one
+        unified entries table) — older files migrate in place: loading
+        a v1/v2 file and saving writes v3.  Missing files and unknown
+        versions are treated as an empty cache (calibration re-measures;
+        never an error)."""
         path = path or self.path
         if not path or not os.path.exists(path):
             return False
@@ -196,22 +254,43 @@ class CalibrationCache:
                 blob = json.load(f)
         except (OSError, json.JSONDecodeError):
             return False
-        # v2 added the (optional) "tuned" table; v1 files are still valid
-        # scalar stores, so reading them preserves old calibrations.
         if not isinstance(blob, dict) or blob.get("version") not in (
-                1, SCHEMA_VERSION):
+                1, 2, SCHEMA_VERSION):
             return False
         with self._lock:
+            if blob.get("version") == SCHEMA_VERSION:
+                entries = blob.get("entries", {})
+                if not isinstance(entries, dict):
+                    return False
+                for k, rec in entries.items():
+                    if not isinstance(rec, dict):
+                        continue
+                    k = str(k)
+                    if isinstance(rec.get("t0"), (int, float)):
+                        self._t0[k] = float(rec["t0"])
+                    if isinstance(rec.get("t_iter"), (int, float)):
+                        self._t_iter[k] = float(rec["t_iter"])
+                    if isinstance(rec.get("tuned"), dict):
+                        self._tuned[k] = dict(rec["tuned"])
+                    if rec.get("provenance") in _PROVENANCE_ORDER:
+                        self._provenance[k] = rec["provenance"]
+                return True
+            # v1/v2 migration: per-table stores with no provenance —
+            # everything persisted was measured at least once, so the
+            # conservative level is "measured" (online upgrades re-earn
+            # themselves from live observations).
             for name, store in (("t0", self._t0), ("t_iter", self._t_iter)):
                 entries = blob.get(name, {})
                 if isinstance(entries, dict):
-                    store.update({str(k): float(v)
-                                  for k, v in entries.items()})
+                    for k, v in entries.items():
+                        store[str(k)] = float(v)
+                        self._provenance.setdefault(str(k), "measured")
             tuned = blob.get("tuned", {})
             if isinstance(tuned, dict):
-                self._tuned.update({str(k): dict(v)
-                                    for k, v in tuned.items()
-                                    if isinstance(v, dict)})
+                for k, v in tuned.items():
+                    if isinstance(v, dict):
+                        self._tuned[str(k)] = dict(v)
+                        self._provenance.setdefault(str(k), "measured")
         return True
 
     def _autosave(self) -> None:

@@ -10,7 +10,6 @@ backends.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from .hardware import HardwareSpec
 

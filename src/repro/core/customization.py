@@ -43,6 +43,12 @@ class CustomizationPoint:
 # Defaults (paper: "The default implementations for these customization
 # points splits the work into equally sized chunks while utilizing all
 # available processing units.")
+#
+# Both defaults delegate to the ExecutionModel's analytic prior policy
+# at zero measured cost and one chunk per core — the Overhead Law
+# degenerates to exactly the paper's default there (all units, equal
+# chunks, never more units than chunks).  One formula, one owner;
+# previously these were a drifting reimplementation of the same math.
 # ---------------------------------------------------------------------------
 
 def _default_measure_iteration(params, executor, body, count: int) -> float:
@@ -51,18 +57,23 @@ def _default_measure_iteration(params, executor, body, count: int) -> float:
     return 0.0
 
 
-def _default_processing_units_count(params, executor, t_iter: float, count: int) -> int:
+def _default_units(executor) -> int:
     units = getattr(executor, "num_units", None)
     if callable(units):
         return max(int(units()), 1)
     return 1
 
 
-def _default_get_chunk_size(params, executor, t_iter: float, cores: int, count: int) -> int:
-    # Equal split over all units: one chunk per unit.
-    import math
+def _default_processing_units_count(params, executor, t_iter: float, count: int) -> int:
+    from .model import default_cores_chunk
 
-    return max(math.ceil(count / max(cores, 1)), 1)
+    return default_cores_chunk(count, _default_units(executor)).n_cores
+
+
+def _default_get_chunk_size(params, executor, t_iter: float, cores: int, count: int) -> int:
+    from .model import default_cores_chunk
+
+    return default_cores_chunk(count, max(int(cores), 1)).chunk_elems
 
 
 measure_iteration = CustomizationPoint(

@@ -9,9 +9,9 @@ Three backends share one protocol of four *execution functions*, mirroring
 * ``then_execute(fn, future)``         — continuation: run ``fn`` on the
   future's value through this executor, return the chained future.
 
-``bulk_sync_execute`` survives only as a deprecated shim (join of
-``bulk_async_execute`` via ``when_all``); it warns once per executor
-instance and will be removed.
+``bulk_sync_execute`` (the v1 sync surface, deprecated in the v2 API
+release) has been **removed**: accessing it raises ``AttributeError``
+with a pointer to the ``when_all(bulk_async_execute(...))`` spelling.
 
 Backends:
 
@@ -37,10 +37,9 @@ from __future__ import annotations
 
 import concurrent.futures as _cf
 import dataclasses
-import warnings
 from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 
-from .future import Future, when_all
+from .future import Future
 from .properties import PropertySupport
 
 
@@ -101,17 +100,19 @@ class ExecutorBase:
     def then_execute(self, fn: Callable[[Any], Any], future: Future) -> Future:
         return future.then(fn, executor=self)
 
-    # -- deprecated v1 surface ---------------------------------------------
-    _bulk_sync_warned = False
-
-    def bulk_sync_execute(self, fn, chunks):
-        if not self._bulk_sync_warned:
-            self._bulk_sync_warned = True
-            warnings.warn(
-                "bulk_sync_execute is deprecated; use "
-                "when_all(executor.bulk_async_execute(fn, chunks)).result()",
-                DeprecationWarning, stacklevel=2)
-        return when_all(self.bulk_async_execute(fn, chunks)).result()
+    # -- removed v1 surface --------------------------------------------------
+    def __getattr__(self, name: str):
+        # Only reached when normal attribute lookup fails.  The v1
+        # bulk_sync_execute shim (deprecated through the v2 API release)
+        # is gone; fail hard with the migration pointer instead of a
+        # generic AttributeError.
+        if name == "bulk_sync_execute":
+            raise AttributeError(
+                "bulk_sync_execute was removed from the executor API; use "
+                "when_all(executor.bulk_async_execute(fn, chunks)).result() "
+                "(repro.core.when_all)")
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
 
 class SequentialExecutor(ExecutorBase, PropertySupport):

@@ -5,10 +5,12 @@ The paper measures t_iter once per workload and trusts it forever
 (Section 4.2).  Under a serving load that assumption breaks: per-token
 cost drifts with sequence length, cache occupancy, co-tenants and thermal
 state.  ``OnlineFeedback`` closes the loop — every chunk an
-``AdaptiveExecutor`` runs is timed and folded into the same
-``CalibrationCache`` entry the acc policy reads, via exponential
-smoothing (``CalibrationCache.smooth_t_iter``), so the *next* decision
-sees the drifted reality.
+``AdaptiveExecutor`` runs is timed and handed to the ``ExecutionModel``
+engine's online-refinement policy (core/model.py), which smooths it into
+the same ``CalibrationCache`` entry the acc policy reads and upgrades
+the key's provenance to ``online``, so the *next* decision sees the
+drifted reality.  This class is the executor-side *collector*; the EMA
+itself is the engine's ``refine`` policy.
 
 Producers tag work with a workload key:
 
@@ -33,6 +35,7 @@ import time
 from typing import Any, Callable, Hashable
 
 from .calibration import DEFAULT_SMOOTHING, CalibrationCache
+from .model import ExecutionModel
 
 WORKLOAD_KEY_ATTR = "__workload_key__"
 WORKLOAD_ELEMS_ATTR = "__workload_elems__"
@@ -76,6 +79,7 @@ class OnlineFeedback:
     def __init__(self, cache: CalibrationCache | None = None,
                  alpha: float = DEFAULT_SMOOTHING, history: int = 512):
         self.cache = cache if cache is not None else CalibrationCache()
+        self.model = ExecutionModel.of(self.cache)
         self.alpha = alpha
         self.observations: collections.deque[Observation] = \
             collections.deque(maxlen=history)
@@ -87,11 +91,12 @@ class OnlineFeedback:
             return None
         obs = Observation(key, int(elems), float(seconds))
         self.observations.append(obs)
-        return self.cache.smooth_t_iter(key, obs.per_elem, self.alpha)
+        return self.model.observe(key, obs.elems, obs.seconds,
+                                  alpha=self.alpha)
 
     def t_iter(self, key: Hashable) -> float | None:
         """The smoothed per-element time currently backing ``key``."""
-        return self.cache.peek_t_iter(key)
+        return self.model.smoothed_t_iter(key)
 
     def count(self, key: Hashable | None = None) -> int:
         if key is None:

@@ -1,0 +1,610 @@
+"""The ``ExecutionModel`` engine — one decide→execute→observe→refine loop.
+
+The paper's contribution is not any single heuristic but an *execution
+model*: a runtime-metric-driven strategy that decides execution
+parameters uniformly behind the executor API.  Before this module the
+repo had four parallel decision stacks that each reimplemented that loop
+with incompatible keys and conventions:
+
+* ``core/acc.AdaptiveCoreChunk`` + ``overhead_law.decide`` — algorithm
+  core counts and chunk sizes;
+* ``core/adaptive.AdaptiveExecutor`` + ``core/feedback.OnlineFeedback``
+  — executor-level drift tracking (EMA over observed chunk wall-clock);
+* ``kernels/autotune.KernelTuner`` — measured Pallas block search;
+* ``train/autotune.choose_plan`` / the serve scheduler's per-tick picks
+  — train/serve planning.
+
+``ExecutionModel`` owns the loop once; the former silos are *policies*
+registered on it:
+
+* **prior**   — ``AnalyticOverheadLaw``: the paper's closed form
+  (Eqs 1-10, ``overhead_law.decide``) as the analytic seed;
+* **search**  — ``MeasuredBlockSearch``: cold-call-excluded best-of-N
+  wall-clock over a legal candidate neighbourhood (the loop that was
+  ``KernelTuner._resolve``);
+* **refine**  — ``OnlineEMA``: exponential smoothing of observed chunk
+  timings back into the calibration store (the loop that was
+  ``OnlineFeedback`` → ``CalibrationCache.smooth_t_iter``).
+
+Every query goes through one typed IR:
+
+* ``DecisionKey``   — workload kind + shape bucket + dtype + hardware;
+* ``Decision``      — cores / chunk / block plan / batch width, plus
+  *provenance* (``analytic | measured | online``) and the inputs that
+  produced it;
+* ``DecisionTrace`` — append-only explainable record of every decision
+  (``--explain-decisions`` on the launch CLIs dumps it).
+
+Provenance is monotone: once a key has measured data it never reports
+``analytic`` again, and once it has online observations it never reports
+``measured`` again (the calibration store only gains information; the
+engine additionally clamps against the best level it has ever reported
+for the key).  All state persists through one ``CalibrationCache``
+(schema v3) so algorithm, kernel, serve and train decisions share a
+single store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import Counter, deque
+from typing import Any, Callable, Hashable, Iterator, Sequence
+
+from . import overhead_law
+from .calibration import DEFAULT_SMOOTHING, CalibrationCache
+from .overhead_law import AccDecision
+
+# Provenance levels, weakest to strongest.  A decision's provenance says
+# what class of evidence backed it: a closed-form estimate, a one-shot
+# measurement, or a continuously-refined online observation.
+ANALYTIC = "analytic"
+MEASURED = "measured"
+ONLINE = "online"
+PROVENANCE_LEVELS = (ANALYTIC, MEASURED, ONLINE)
+
+
+def provenance_rank(level: str) -> int:
+    """Position of ``level`` in the upgrade order (unknown maps to 0)."""
+    try:
+        return PROVENANCE_LEVELS.index(level)
+    except ValueError:
+        return 0
+
+
+def provenance_max(a: str | None, b: str | None) -> str:
+    """The stronger of two provenance levels (None counts as analytic)."""
+    a = a or ANALYTIC
+    b = b or ANALYTIC
+    return a if provenance_rank(a) >= provenance_rank(b) else b
+
+
+def hardware_key() -> str:
+    """Stable id of the accelerator this process runs on.
+
+    Measured winners and calibrations are only valid on the hardware
+    that produced them: a block tuned in interpret mode on a CPU says
+    nothing about a v5e.  (Moved here from kernels/autotune so every
+    policy shares one definition.)
+    """
+    try:
+        import jax
+
+        devs = jax.devices()
+        kind = getattr(devs[0], "device_kind", "unknown")
+        return f"{jax.default_backend()}:{kind}:{len(devs)}"
+    except Exception:  # pragma: no cover - no backend at all
+        return "unknown"
+
+
+# ---------------------------------------------------------------------------
+# The typed Decision IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecisionKey:
+    """What a decision is *for*: workload kind + shape bucket + dtype +
+    hardware.  ``cache_key()`` is the stable hashable the calibration
+    store indexes by — a key adopted from a legacy workload key
+    (``wrap``) keeps that key's *exact* cache identity (``raw``), so
+    persisted v1/v2 entries keep resolving whatever shape the original
+    key had (tuple, string, anything hashable)."""
+
+    kind: str
+    shape: tuple = ()
+    dtype: str = ""
+    hardware: str = ""
+    # Set by wrap(): the legacy key verbatim.  When present it IS the
+    # cache identity — typed fields above only label the trace.
+    raw: Hashable | None = None
+
+    def cache_key(self) -> Hashable:
+        if self.raw is not None:
+            return self.raw
+        key: tuple = (self.kind,) + tuple(self.shape)
+        if self.dtype:
+            key += (self.dtype,)
+        if self.hardware:
+            key += (self.hardware,)
+        return key
+
+    @classmethod
+    def wrap(cls, key: Hashable) -> "DecisionKey":
+        """Adopt a legacy workload key (plain tuple, string, any
+        hashable) into the IR without changing its cache identity."""
+        if isinstance(key, DecisionKey):
+            return key
+        if isinstance(key, tuple) and key and isinstance(key[0], str):
+            return cls(kind=key[0], shape=tuple(key[1:]), raw=key)
+        return cls(kind=str(key), raw=key)
+
+    def __str__(self) -> str:
+        parts = ", ".join(str(s) for s in self.shape)
+        text = f"{self.kind}({parts})"
+        if self.dtype:
+            text += f" {self.dtype}"
+        if self.hardware:
+            text += f" @{self.hardware}"
+        return text
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One resolved decision: the execution parameters plus where they
+    came from.  ``inputs`` is the (name, value) record that makes the
+    decision explainable — everything the policy consumed."""
+
+    key: DecisionKey
+    policy: str                     # registered policy that produced it
+    provenance: str                 # analytic | measured | online
+    cores: int = 1                  # processing units / batch width
+    chunk: int = 0                  # elements per task (0: not a chunked op)
+    block_plan: tuple = ()          # Pallas blocks, when a kernel decision
+    batch_width: int | None = None  # serve/train width when distinct
+    acc: AccDecision | None = None  # full Overhead-Law record when present
+    inputs: tuple = ()              # ((name, value), ...)
+
+    def input(self, name: str, default: Any = None) -> Any:
+        for k, v in self.inputs:
+            if k == name:
+                return v
+        return default
+
+    def explain(self) -> str:
+        """One human-readable line: key, result, policy, inputs."""
+        result = []
+        if self.block_plan:
+            result.append(f"block={self.block_plan}")
+        else:
+            result.append(f"cores={self.cores} chunk={self.chunk}")
+        if self.batch_width is not None:
+            result.append(f"width={self.batch_width}")
+        shown = []
+        for k, v in self.inputs:
+            if k == "timings":  # candidate sweep: summarise, don't dump
+                v = f"<{len(v)} measured>"
+            shown.append(f"{k}={_fmt(v)}")
+        return (f"[{self.policy}/{self.provenance:8s}] {self.key}: "
+                + " ".join(result)
+                + ("  " + " ".join(shown) if shown else ""))
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    seq: int
+    decision: Decision
+
+
+class DecisionTrace:
+    """Append-only, bounded record of every decision the engine made.
+
+    Bounded because a serving loop decides every tick forever; the
+    ``dropped`` counter says how many early entries aged out, so a dump
+    is never silently mistaken for the full history."""
+
+    def __init__(self, maxlen: int = 4096):
+        self._entries: deque[TraceEntry] = deque(maxlen=maxlen)
+        self._seq = 0
+        self.dropped = 0
+        self._lock = threading.Lock()
+
+    def record(self, decision: Decision) -> TraceEntry:
+        with self._lock:
+            if len(self._entries) == self._entries.maxlen:
+                self.dropped += 1
+            entry = TraceEntry(self._seq, decision)
+            self._seq += 1
+            self._entries.append(entry)
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self) -> Iterator[TraceEntry]:
+        return iter(list(self._entries))
+
+    def entries(self, kind: str | None = None) -> list[TraceEntry]:
+        out = list(self._entries)
+        if kind is not None:
+            out = [e for e in out if e.decision.key.kind == kind]
+        return out
+
+    def explain(self, kind: str | None = None,
+                limit: int | None = None) -> str:
+        entries = self.entries(kind)
+        kinds = Counter(e.decision.key.kind for e in entries)
+        header = (f"decision trace: {len(entries)} decisions"
+                  + (f" (+{self.dropped} aged out)" if self.dropped else "")
+                  + " — "
+                  + ", ".join(f"{n} {k}" for k, n in sorted(kinds.items())))
+        if limit is not None:
+            entries = entries[-limit:]
+        lines = [f"  #{e.seq:04d} {e.decision.explain()}" for e in entries]
+        return "\n".join([header] + lines)
+
+
+# ---------------------------------------------------------------------------
+# Policies (the former silos, now pluggable)
+# ---------------------------------------------------------------------------
+
+class AnalyticOverheadLaw:
+    """Analytic prior policy: the paper's Overhead Law, Eqs 1-10.
+
+    This is the single in-repo gateway to ``overhead_law.decide`` — every
+    cores/chunk decision (algorithms, serve ticks, train plans,
+    customization-point defaults) flows through here.
+    """
+
+    name = "overhead-law"
+
+    def decide(self, *, t_iter: float, count: int, t0: float,
+               max_cores: int,
+               eff: float = overhead_law.DEFAULT_EFFICIENCY,
+               chunks_per_core: int = overhead_law.DEFAULT_CHUNKS_PER_CORE,
+               snap_cores: Callable[[int], int] | None = None
+               ) -> AccDecision:
+        d = overhead_law.decide(
+            t_iter=t_iter, n_elements=count, t0=t0, max_cores=max_cores,
+            eff=eff, chunks_per_core=chunks_per_core)
+        if snap_cores is not None and d.n_cores > 1:
+            # Backend constraint (e.g. mesh shardings need a divisor of
+            # the data extent): snap, then recompute the derived fields.
+            cores = max(int(snap_cores(d.n_cores)), 1)
+            if cores != d.n_cores:
+                import math
+
+                chunk = overhead_law.chunk_size(count, cores,
+                                                chunks_per_core)
+                d = dataclasses.replace(
+                    d, n_cores=cores, chunk_elems=chunk,
+                    n_chunks=math.ceil(count / chunk),
+                    predicted_time=overhead_law.predicted_time(
+                        d.t1, cores, t0),
+                    predicted_speedup=overhead_law.speedup(d.t1, cores, t0),
+                    predicted_efficiency=overhead_law.efficiency(
+                        d.t1, cores, t0),
+                )
+        return d
+
+
+class MeasuredBlockSearch:
+    """Measured-search policy (the loop that was ``KernelTuner``'s).
+
+    ``run`` callables execute the real kernel once for a candidate on
+    synthetic data of the right shape and must synchronise internally
+    (``jax.block_until_ready``).  Every probe runs inside an eager
+    escape hatch so the clock times execution, not tracing, even when
+    the consumer resolves plans mid-trace of an outer ``jax.jit``.
+    """
+
+    name = "measured-search"
+
+    def __init__(self, repeats: int = 3):
+        self.repeats = max(int(repeats), 1)
+
+    @staticmethod
+    def _eager():
+        """Escape any ambient trace for the duration of a probe.
+
+        ``eval_context`` restores a clean top-level context (unlike
+        ``ensure_compile_time_eval``, it does not leak eager evaluation
+        into the Pallas kernel's own trace); fall back to the latter if
+        a future jax drops it.
+        """
+        import jax
+
+        ctx = getattr(jax.core, "eval_context", None)
+        return ctx() if ctx is not None else jax.ensure_compile_time_eval()
+
+    def measure(self, run: Callable[..., None], cand: tuple,
+                repeats: int | None = None) -> float:
+        repeats = self.repeats if repeats is None else max(int(repeats), 1)
+        with self._eager():
+            run(*cand)                   # cold call: compile, untimed
+            best = float("inf")
+            for _ in range(repeats):
+                t = time.perf_counter()
+                run(*cand)
+                best = min(best, time.perf_counter() - t)
+        return best
+
+    def search(self, candidates: Sequence[tuple],
+               run: Callable[..., None],
+               repeats: int | None = None
+               ) -> tuple[tuple, float, tuple]:
+        """Best-of-``repeats`` wall-clock over ``candidates``; returns
+        (winner, winner_seconds, ((candidate, seconds), ...))."""
+        timings = tuple((cand, self.measure(run, cand, repeats))
+                        for cand in candidates)
+        winner, seconds = min(timings, key=lambda cs: cs[1])
+        return winner, seconds, timings
+
+
+class OnlineEMA:
+    """Online refinement policy (the loop that was ``OnlineFeedback`` →
+    ``smooth_t_iter``): fold observed per-chunk wall-clock back into the
+    calibration store with exponential smoothing, so the *next* decision
+    sees the drifted reality instead of a one-shot calibration."""
+
+    name = "online-ema"
+
+    def __init__(self, alpha: float = DEFAULT_SMOOTHING):
+        self.alpha = alpha
+
+    def refine(self, cache: CalibrationCache, key: tuple, elems: int,
+               seconds: float, alpha: float | None = None) -> float | None:
+        if elems <= 0 or seconds <= 0.0:
+            return None
+        per_elem = seconds / max(int(elems), 1)
+        value = cache.smooth_t_iter(
+            key, per_elem, self.alpha if alpha is None else alpha)
+        cache.note_provenance(key, ONLINE)
+        return value
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class ExecutionModel:
+    """One decide→execute→observe→refine engine over one calibration
+    store.  Construct directly for an isolated engine, or use
+    ``ExecutionModel.of(cache)`` to share the engine (and its trace)
+    among every consumer of that cache — which is how the acc object,
+    the executor feedback layer, the kernel tuner and the serve/train
+    planners end up in a single trace."""
+
+    def __init__(self, cache: CalibrationCache | None = None, *,
+                 hardware: str | None = None, trace_limit: int = 4096):
+        self.cache = cache if cache is not None else CalibrationCache()
+        self._hardware = hardware   # resolved lazily: hardware_key()
+        self.trace = DecisionTrace(trace_limit)
+        self.policies: dict[str, Any] = {}
+        self.register_policy("prior", AnalyticOverheadLaw())
+        self.register_policy("search", MeasuredBlockSearch())
+        self.register_policy("refine", OnlineEMA())
+        self._lock = threading.Lock()
+        self._reported: dict[tuple, str] = {}   # provenance high-water
+        self.decisions = 0
+        self.cache_hits = 0     # tuned lookups answered from the store
+        self.searches = 0       # measured candidate sweeps
+        self.observations = 0   # online refinements folded in
+
+    @property
+    def hardware(self) -> str:
+        """This process's accelerator id (resolved on first use so merely
+        constructing an engine never touches the jax backend)."""
+        if self._hardware is None:
+            self._hardware = hardware_key()
+        return self._hardware
+
+    @classmethod
+    def of(cls, cache: CalibrationCache) -> "ExecutionModel":
+        """The engine bound to ``cache`` (created and attached on first
+        use).  Everyone who shares the cache shares the engine."""
+        model = getattr(cache, "_execution_model", None)
+        if model is None:
+            model = cls(cache)
+            cache._execution_model = model
+        return model
+
+    def register_policy(self, slot: str, policy: Any) -> Any:
+        """Register ``policy`` under ``slot`` (``prior`` / ``search`` /
+        ``refine`` are the built-in slots; new subsystems may add their
+        own and query them via ``self.policies``)."""
+        self.policies[slot] = policy
+        return policy
+
+    # -- provenance ----------------------------------------------------------
+    def provenance_of(self, key: DecisionKey | Hashable) -> str:
+        """Strongest evidence level available for ``key`` — the max of
+        what the store records and what this engine has ever reported
+        (so provenance never downgrades within a process either)."""
+        k = DecisionKey.wrap(key).cache_key()
+        stored = self.cache.provenance(k)
+        with self._lock:
+            return provenance_max(stored, self._reported.get(k))
+
+    def _finish(self, decision: Decision) -> Decision:
+        k = decision.key.cache_key()
+        with self._lock:
+            self._reported[k] = provenance_max(
+                self._reported.get(k), decision.provenance)
+            self.decisions += 1
+        self.trace.record(decision)
+        return decision
+
+    # -- queries -------------------------------------------------------------
+    def cores_chunk(self, key: DecisionKey | Hashable, *, t_iter: float,
+                    count: int, t0: float, max_cores: int,
+                    eff: float = overhead_law.DEFAULT_EFFICIENCY,
+                    chunks_per_core: int =
+                    overhead_law.DEFAULT_CHUNKS_PER_CORE,
+                    snap_cores: Callable[[int], int] | None = None,
+                    evidence: Sequence[Hashable] = (),
+                    inputs: tuple = ()) -> Decision:
+        """Cores + chunk for a workload: the analytic prior policy over
+        ``t_iter`` (which may itself be measured or online-refined —
+        provenance reflects the strongest evidence behind the key).
+        ``evidence`` names extra workload keys whose calibrations fed
+        the ``t_iter`` input (e.g. a serve tick blends the prefill and
+        decode keys), so their provenance counts too."""
+        dkey = DecisionKey.wrap(key)
+        prior: AnalyticOverheadLaw = self.policies["prior"]
+        d = prior.decide(t_iter=t_iter, count=count, t0=t0,
+                         max_cores=max_cores, eff=eff,
+                         chunks_per_core=chunks_per_core,
+                         snap_cores=snap_cores)
+        provenance = self.provenance_of(dkey)
+        for ekey in evidence:
+            provenance = provenance_max(provenance,
+                                        self.provenance_of(ekey))
+        return self._finish(Decision(
+            key=dkey, policy=prior.name, provenance=provenance,
+            cores=d.n_cores, chunk=d.chunk_elems, acc=d,
+            inputs=(("t_iter", t_iter), ("count", count), ("t0", t0),
+                    ("max_cores", max_cores)) + tuple(inputs)))
+
+    def default_cores_chunk(self, count: int, max_cores: int) -> AccDecision:
+        """The customization-point *default* decision (paper: "splits the
+        work into equally sized chunks while utilizing all available
+        processing units"): the Overhead Law degenerates to exactly that
+        at zero measured cost and one chunk per core.  Untraced — it is
+        the absence of a policy, not a policy."""
+        return default_cores_chunk(count, max_cores,
+                                   prior=self.policies["prior"])
+
+    def tuned_blocks(self, key: DecisionKey | Hashable,
+                     candidates: Sequence[tuple],
+                     run: Callable[..., None], fields: tuple[str, ...], *,
+                     repeats: int | None = None) -> Decision:
+        """Measured winner for a kernel block key: from the store when a
+        legal persisted record exists, else a candidate sweep through
+        the measured-search policy, persisted for every later process
+        sharing the store."""
+        dkey = DecisionKey.wrap(key)
+        k = dkey.cache_key()
+        search: MeasuredBlockSearch = self.policies["search"]
+        rec = self.cache.tuned(k)
+        winner: tuple | None = None
+        if rec is not None:
+            try:
+                winner = tuple(int(rec[f]) for f in fields)
+                if any(v <= 0 for v in winner):
+                    winner = None  # illegal block: re-measure
+            except (KeyError, TypeError, ValueError):
+                winner = None      # torn/foreign record: re-measure
+        if winner is not None:
+            with self._lock:
+                self.cache_hits += 1
+            return self._finish(Decision(
+                key=dkey, policy=search.name, provenance=MEASURED,
+                block_plan=winner,
+                inputs=(("prior", tuple(candidates[0])),
+                        ("measured", False), ("from_store", True))))
+        winner, seconds, timings = search.search(candidates, run, repeats)
+        with self._lock:
+            self.searches += 1
+        record = {f: int(v) for f, v in zip(fields, winner)}
+        record.update(hw=dkey.hardware or self.hardware, seconds=seconds,
+                      candidates=len(candidates))
+        self.cache.set_tuned(k, record)
+        self.cache.note_provenance(k, MEASURED)
+        return self._finish(Decision(
+            key=dkey, policy=search.name, provenance=MEASURED,
+            block_plan=winner,
+            inputs=(("prior", tuple(candidates[0])),
+                    ("measured", True), ("seconds", seconds),
+                    ("candidates", len(candidates)),
+                    ("timings", timings))))
+
+    def observe(self, key: DecisionKey | Hashable, elems: int,
+                seconds: float, alpha: float | None = None) -> float | None:
+        """Fold one observed chunk timing into the store (online
+        refinement stage).  Returns the smoothed per-element time now
+        backing decisions for ``key``.  Observations are counted but not
+        traced — they refine inputs; decisions consume them."""
+        refine: OnlineEMA = self.policies["refine"]
+        k = DecisionKey.wrap(key).cache_key()
+        value = refine.refine(self.cache, k, elems, seconds, alpha)
+        if value is not None:
+            with self._lock:
+                self.observations += 1
+        return value
+
+    def measured_t_iter(self, key: DecisionKey | Hashable,
+                        measure: Callable[[], float]) -> float:
+        """Memoised one-shot t_iter measurement (paper Section 4.2),
+        recorded as ``measured`` provenance for the key."""
+        k = DecisionKey.wrap(key).cache_key()
+        value = self.cache.t_iter(k, measure)
+        self.cache.note_provenance(k, MEASURED)
+        return value
+
+    def smoothed_t_iter(self, key: DecisionKey | Hashable) -> float | None:
+        """Current (possibly online-refined) t_iter for ``key``."""
+        return self.cache.peek_t_iter(DecisionKey.wrap(key).cache_key())
+
+    def t0(self, key: DecisionKey | Hashable,
+           measure: Callable[[], float]) -> float:
+        """Memoised T0 calibration through the shared store."""
+        k = DecisionKey.wrap(key).cache_key()
+        value = self.cache.t0(k, measure)
+        self.cache.note_provenance(k, MEASURED)
+        return value
+
+    def note(self, key: DecisionKey | Hashable, *, policy: str,
+             cores: int = 1, chunk: int = 0, block_plan: tuple = (),
+             batch_width: int | None = None,
+             acc: AccDecision | None = None,
+             inputs: tuple = ()) -> Decision:
+        """Trace a derived decision a consumer finalised outside the
+        built-in policies (e.g. the train planner's divisor snapping) so
+        the dump still attributes the *final* numbers."""
+        dkey = DecisionKey.wrap(key)
+        return self._finish(Decision(
+            key=dkey, policy=policy, provenance=self.provenance_of(dkey),
+            cores=cores, chunk=chunk, block_plan=tuple(block_plan),
+            batch_width=batch_width, acc=acc, inputs=tuple(inputs)))
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return {"decisions": self.decisions,
+                    "cache_hits": self.cache_hits,
+                    "searches": self.searches,
+                    "observations": self.observations,
+                    "trace_len": len(self.trace),
+                    "hardware": self.hardware}
+
+    def explain(self, kind: str | None = None,
+                limit: int | None = None) -> str:
+        s = self.stats()
+        header = (f"ExecutionModel[{s['hardware']}]: "
+                  f"{s['decisions']} decisions, {s['searches']} searches, "
+                  f"{s['cache_hits']} store hits, "
+                  f"{s['observations']} observations")
+        return header + "\n" + self.trace.explain(kind=kind, limit=limit)
+
+
+_DEFAULT_PRIOR = AnalyticOverheadLaw()
+
+
+def default_cores_chunk(count: int, max_cores: int, *,
+                        prior: AnalyticOverheadLaw | None = None
+                        ) -> AccDecision:
+    """The shared customization-point default (see
+    ``ExecutionModel.default_cores_chunk``): all available units, equal
+    chunks, via the same Overhead-Law policy every engine uses — the
+    defaults in core/customization.py delegate here instead of
+    reimplementing the formulas."""
+    prior = prior if prior is not None else _DEFAULT_PRIOR
+    return prior.decide(t_iter=0.0, count=max(int(count), 1), t0=0.0,
+                        max_cores=max(int(max_cores), 1),
+                        chunks_per_core=1)

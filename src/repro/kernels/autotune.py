@@ -11,52 +11,48 @@ formula.  This module closes that gap for the kernels themselves:
   prior (halved/doubled blocks), every candidate tile-aligned and inside
   the VMEM double-buffering budget, so the search space is the set of
   plans the static model would already consider legal;
-* **measurement harness** — each candidate is wall-clocked with the same
-  cold-call discipline as ``core/feedback.py``: one untimed call pays XLA
-  compilation, then best-of-``repeats`` timed calls strip scheduler
-  noise (compile seconds must never be recorded as a winner's cost);
+* **measurement harness** — each candidate is wall-clocked through the
+  ``ExecutionModel`` engine's measured-search policy (core/model.py)
+  with the same cold-call discipline as ``core/feedback.py``: one
+  untimed call pays XLA compilation, then best-of-``repeats`` timed
+  calls strip scheduler noise (compile seconds must never be recorded
+  as a winner's cost);
 * **persistence** — the winner is stored through ``CalibrationCache``'s
   versioned JSON store under a ``(kernel, shape-bucket, dtype, hardware)``
-  key, so a later process (serving or training — they share the store)
-  skips the search, while a *different* accelerator keys separately:
-  winners tuned on another machine are never inherited, and machines
-  sharing one store coexist instead of overwriting each other.
+  ``DecisionKey``, so a later process (serving or training — they share
+  the store) skips the search, while a *different* accelerator keys
+  separately: winners tuned on another machine are never inherited, and
+  machines sharing one store coexist instead of overwriting each other.
 
 Shapes are bucketed to powers of two: nearby problem sizes share one
 winner, keeping the store and the search effort bounded under a serving
 load where every request length differs.
+
+Since the ExecutionModel unification, ``KernelTuner`` is a thin
+kernel-facing front-end: candidate generation and ``BlockPlan``
+packaging live here; the search loop, the store round-trip and the
+decision trace live on the engine (one trace for kernel, algorithm,
+serve and train decisions).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import math
-import time
 from typing import Callable, Hashable, Sequence
 
 from ..core.calibration import CalibrationCache
 from ..core.hardware import TPU_V5E, HardwareSpec
+from ..core.model import DecisionKey, ExecutionModel, hardware_key
 from . import tuning
 from .tuning import (LANE, SUBLANE, BlockPlan, attention_live_bytes,
                      max_block_1d)
 
 KEY_NAMESPACE = "pallas_block"
 
-
-def hardware_key() -> str:
-    """Stable id of the accelerator this process measures on.
-
-    Winners are only valid on the hardware that produced them: a block
-    tuned in interpret mode on a CPU says nothing about a v5e.
-    """
-    try:
-        import jax
-
-        devs = jax.devices()
-        kind = getattr(devs[0], "device_kind", "unknown")
-        return f"{jax.default_backend()}:{kind}:{len(devs)}"
-    except Exception:  # pragma: no cover - no backend at all
-        return "unknown"
+__all__ = ["KernelTuner", "TuneReport", "KEY_NAMESPACE", "hardware_key",
+           "shape_bucket", "candidates_1d", "candidates_attention",
+           "attention_live_bytes"]
 
 
 def shape_bucket(n: int) -> int:
@@ -162,8 +158,8 @@ class KernelTuner:
     kernel once for a candidate on synthetic data of the right shape and
     must synchronise internally (``jax.block_until_ready``) — the same
     contract the executor feedback layer imposes on timed thunks.  The
-    harness wraps every probe in ``jax.ensure_compile_time_eval()``, so
-    the synthetic arrays stay concrete and the kernel really executes
+    engine's search policy wraps every probe in an eager escape hatch,
+    so the synthetic arrays stay concrete and the kernel really executes
     even when the consumer is mid-trace inside an outer ``jax.jit``
     (without it the probes would be staged and the clock would time
     tracing).
@@ -173,6 +169,7 @@ class KernelTuner:
                  hw: HardwareSpec = TPU_V5E, repeats: int = 3,
                  hardware: str | None = None):
         self.cache = cache if cache is not None else CalibrationCache()
+        self.model = ExecutionModel.of(self.cache)
         self.hw = hw
         self.repeats = max(int(repeats), 1)
         self.hardware = hardware if hardware is not None else hardware_key()
@@ -189,66 +186,23 @@ class KernelTuner:
         use — training and serving processes share winners through it."""
         return cls(CalibrationCache.persistent(cache_dir), **kw)
 
-    # -- measurement harness -------------------------------------------------
-    @staticmethod
-    def _eager():
-        """Escape any ambient trace for the duration of a probe.
-
-        Consumers resolve plans at jit-trace time (scheduler/engine/
-        train step): under the ambient trace, jnp array creation and
-        jit'd kernel calls would be *staged* (tracers), so the clock
-        would time trace overhead, not execution.  ``eval_context``
-        restores a clean top-level context (unlike
-        ``ensure_compile_time_eval``, it does not leak eager evaluation
-        into the Pallas kernel's own trace); fall back to the latter if
-        a future jax drops it.
-        """
-        import jax
-
-        ctx = getattr(jax.core, "eval_context", None)
-        return ctx() if ctx is not None else jax.ensure_compile_time_eval()
-
-    def _measure(self, run: Callable[..., None],
-                 cand: tuple) -> float:
-        with self._eager():
-            run(*cand)                   # cold call: compile, untimed
-            best = float("inf")
-            for _ in range(self.repeats):
-                t = time.perf_counter()
-                run(*cand)
-                best = min(best, time.perf_counter() - t)
-        return best
-
-    def _resolve(self, key: Hashable, candidates: Sequence[tuple],
+    def _resolve(self, key: DecisionKey, candidates: Sequence[tuple],
                  run: Callable[..., None], fields: tuple[str, ...]) -> tuple:
-        """Winner for ``key`` (which includes the hardware id): from the
-        store when present, else measured over ``candidates`` and
-        persisted."""
-        rec = self.cache.tuned(key)
-        if rec is not None:
-            try:
-                winner = tuple(int(rec[f]) for f in fields)
-                if any(v <= 0 for v in winner):
-                    winner = None  # illegal block: re-measure
-            except (KeyError, TypeError, ValueError):
-                winner = None  # torn/foreign record: re-measure
-            if winner is not None:
-                self.cache_hits += 1
-                self.reports.append(TuneReport(
-                    key=tuple(key), winner=winner,
-                    prior=tuple(candidates[0]), measured=False))
-                return winner
-        timings = [(cand, self._measure(run, cand)) for cand in candidates]
-        winner, seconds = min(timings, key=lambda cs: cs[1])
-        self.searches += 1
-        record = {f: int(v) for f, v in zip(fields, winner)}
-        record.update(hw=self.hardware, seconds=seconds,
-                      candidates=len(candidates))
-        self.cache.set_tuned(key, record)
+        """Winner for ``key`` (which includes the hardware id): resolved
+        by the ExecutionModel — from the store when present, else the
+        measured-search policy sweeps ``candidates`` and persists."""
+        decision = self.model.tuned_blocks(key, candidates, run, fields,
+                                           repeats=self.repeats)
+        measured = bool(decision.input("measured"))
+        if measured:
+            self.searches += 1
+        else:
+            self.cache_hits += 1
         self.reports.append(TuneReport(
-            key=tuple(key), winner=winner, prior=tuple(candidates[0]),
-            measured=True, timings=tuple(timings)))
-        return winner
+            key=key.cache_key(), winner=decision.block_plan,
+            prior=tuple(candidates[0]), measured=measured,
+            timings=tuple(decision.input("timings", ()))))
+        return decision.block_plan
 
     # -- public planning entry points ----------------------------------------
     def plan_1d(self, kernel: str, n: int,
@@ -266,8 +220,9 @@ class KernelTuner:
                               arrays_in_vmem=arrays_in_vmem, hw=self.hw,
                               align=align, prior=prior,
                               vmem_fraction=vmem_fraction)
-        key = (KEY_NAMESPACE, kernel, shape_bucket(n), str(dtype),
-               self.hardware)
+        key = DecisionKey(kind=KEY_NAMESPACE,
+                          shape=(kernel, shape_bucket(n)),
+                          dtype=str(dtype), hardware=self.hardware)
         (block,) = self._resolve(key, [(c,) for c in cands],
                                  lambda b: run(int(b)), ("block",))
         block = min(block, ((n + align - 1) // align) * align)
@@ -291,8 +246,16 @@ class KernelTuner:
                                      bytes_per_elem=bytes_per_elem,
                                      hw=self.hw,
                                      vmem_fraction=vmem_fraction)
-        key = (KEY_NAMESPACE, kernel, shape_bucket(sq), shape_bucket(skv),
-               int(d), str(dtype), repr(variant), self.hardware)
+        # raw= pins the exact pre-unification (schema v2) tuple order —
+        # dtype before variant — so winners persisted by older processes
+        # keep resolving; the typed fields label the trace only.
+        key = DecisionKey(kind=KEY_NAMESPACE,
+                          shape=(kernel, shape_bucket(sq),
+                                 shape_bucket(skv), int(d), repr(variant)),
+                          dtype=str(dtype), hardware=self.hardware,
+                          raw=(KEY_NAMESPACE, kernel, shape_bucket(sq),
+                               shape_bucket(skv), int(d), str(dtype),
+                               repr(variant), self.hardware))
         bq, bk = self._resolve(key, cands,
                                lambda q, k: run(int(q), int(k)),
                                ("block_q", "block_kv"))

@@ -184,7 +184,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
              seq_shard: bool = False, cache_seq_model: bool = False,
              moe_local: bool = False, serve_no_fsdp: bool = False,
              bf16_params: bool = False, moe_ff2d: bool = False,
-             verbose: bool = True, tag: str = "") -> dict:
+             verbose: bool = True, tag: str = "",
+             acc: AdaptiveCoreChunk | None = None,
+             plan_only: bool = False) -> dict:
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     ok, reason = shape_applicable(cfg, shape)
@@ -196,6 +198,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         if verbose:
             print(f"SKIP  {arch:22s} {shape_name:12s} {mesh_name:6s} {reason}")
         return rec
+    if plan_only and shape.kind != "train":
+        rec = {"cell": cell_id, "status": "skipped",
+               "reason": "plan-only runs cover train cells (acc plan)"}
+        _save(out_dir, cell_id, rec)
+        if verbose:
+            print(f"SKIP  {arch:22s} {shape_name:12s} {mesh_name:6s} "
+                  f"plan-only")
+        return rec
 
     t0 = time.time()
     try:
@@ -203,11 +213,23 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
             if accum is None:
                 if use_acc:
                     mexec = adaptive(
-                        MeshExecutor(mesh, data_axes=("pod", "data")))
+                        MeshExecutor(mesh, data_axes=("pod", "data")), acc)
                     plan = autotune.choose_plan(cfg, shape, mexec)
                     accum = plan.accum
                 else:
                     accum = 1
+            if plan_only:
+                # acc-plan sweep without the production-mesh compile:
+                # exercises the ExecutionModel end to end (profile →
+                # engine decision → divisor snapping → trace) and is
+                # what CI runs to produce the decision-trace artifact.
+                rec = {"cell": cell_id, "status": "planned",
+                       "accum": accum, "plan_s": time.time() - t0}
+                _save(out_dir, cell_id, rec)
+                if verbose:
+                    print(f"PLAN  {arch:22s} {shape_name:12s} "
+                          f"{mesh_name:6s} accum={accum}")
+                return rec
             lowered = lower_train(cfg, shape, mesh, accum=accum,
                                   attn_impl=attn_impl, remat=remat,
                                   moment_dtype=moment_dtype,
@@ -340,6 +362,12 @@ def main() -> None:
     ap.add_argument("--serve-no-fsdp", action="store_true",
                     help="decode: drop 'data' from weight specs (no "
                          "per-token FSDP gathers; weights must fit TP)")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="acc plans only, no lower/compile (fast; the "
+                         "CI path for the decision-trace artifact)")
+    ap.add_argument("--explain-decisions", action="store_true",
+                    help="dump the ExecutionModel decision trace and "
+                         "write it to <out>/decision_trace.txt")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
 
@@ -348,6 +376,10 @@ def main() -> None:
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
 
+    # One acc object (one calibration cache, one ExecutionModel engine)
+    # for the whole sweep, so every cell's plan lands in a single
+    # explainable trace.
+    acc = AdaptiveCoreChunk()
     n_ok = n_skip = n_fail = 0
     for arch in archs:
         for shape_name in shapes:
@@ -364,12 +396,23 @@ def main() -> None:
                                serve_no_fsdp=args.serve_no_fsdp,
                                bf16_params=args.bf16_params,
                                moe_ff2d=args.moe_ff2d,
-                               tag=args.tag)
-                n_ok += rec["status"] == "ok"
+                               tag=args.tag, acc=acc,
+                               plan_only=args.plan_only)
+                n_ok += rec["status"] in ("ok", "planned")
                 n_skip += rec["status"] == "skipped"
                 n_fail += rec["status"] == "error"
     print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
           f"{n_fail} failed")
+    if args.explain_decisions:
+        from ..core.model import ExecutionModel
+
+        text = ExecutionModel.of(acc.cache).explain()
+        os.makedirs(args.out, exist_ok=True)
+        trace_path = os.path.join(args.out, "decision_trace.txt")
+        with open(trace_path, "w") as f:
+            f.write(text + "\n")
+        print(text)
+        print(f"decision trace written to {trace_path}")
     if n_fail:
         raise SystemExit(1)
 

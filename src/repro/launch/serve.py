@@ -61,6 +61,10 @@ def main() -> None:
     ap.add_argument("--kernel-autotune", action="store_true",
                     help="measured Pallas blocks for prefill/decode "
                          "(winners persist in the calibration cache)")
+    ap.add_argument("--explain-decisions", action="store_true",
+                    help="dump the ExecutionModel decision trace: every "
+                         "serve-tick and kernel-block choice with the "
+                         "policy and inputs that produced it")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -82,6 +86,10 @@ def main() -> None:
         if tuner is not None:
             print(f"kernel autotune: {tuner.searches} measured searches, "
                   f"{tuner.cache_hits} persisted winners reused")
+        if args.explain_decisions:
+            from ..core.model import ExecutionModel
+
+            print(ExecutionModel.of(cache).explain())
         return
     max_len = args.prompt_len + args.new_tokens + 1
     sched = ServeScheduler(cfg, params, n_slots=args.slots, max_len=max_len,
@@ -116,6 +124,13 @@ def main() -> None:
     if tuner is not None:
         print(f"kernel autotune: {tuner.searches} measured searches, "
               f"{tuner.cache_hits} persisted winners reused")
+    if args.explain_decisions:
+        # acc, scheduler ticks and the kernel tuner all share the engine
+        # bound to `cache`, so one dump attributes every decision made
+        # this run — serve ticks, train-style plans, kernel blocks.
+        model = sched.decision_model()
+        if model is not None:
+            print(model.explain())
     if not args.no_cal_cache:
         cache.save()   # flush any write-throttled smoothing updates
         print(f"calibration cache: {cache.path} ({len(cache)} entries)")

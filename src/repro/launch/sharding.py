@@ -23,7 +23,7 @@ import jax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..configs.base import ArchConfig, ShapeConfig
+from ..configs.base import ArchConfig
 from . import mesh as mesh_lib
 
 # (path-suffix regex, spec for the TRAILING dims of the leaf)

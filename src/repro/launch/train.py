@@ -19,7 +19,7 @@ import jax
 from ..configs import ARCH_NAMES, get_config
 from ..core.adaptive import adaptive
 from ..core.executor import MeshExecutor
-from ..data import TokenPipeline, make_batch
+from ..data import make_batch
 from ..models import lm
 from ..optim import AdamWConfig, adamw
 from ..runtime import FaultTolerantTrainer
@@ -50,6 +50,10 @@ def main() -> None:
                     help="measured Pallas blocks for model-layer kernels "
                          "(winners persist in the calibration cache, "
                          "shared with serving)")
+    ap.add_argument("--explain-decisions", action="store_true",
+                    help="dump the ExecutionModel decision trace: the "
+                         "train plan and kernel-block choices with the "
+                         "policy and inputs that produced them")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -113,6 +117,12 @@ def main() -> None:
                   f"gnorm {m['grad_norm']:.3f}")
     tok_s = args.batch * args.seq * len(log) / dt
     print(f"done: {len(log)} steps in {dt:.1f}s ({tok_s:.0f} tok/s)")
+    if args.explain_decisions:
+        from ..core.model import ExecutionModel
+
+        # The acc plan and any kernel-autotune searches share the engine
+        # bound to this process's calibration cache.
+        print(ExecutionModel.of(cache).explain())
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ Three softmax-attention implementations share one signature:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

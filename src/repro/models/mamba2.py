@@ -7,8 +7,6 @@ Parallel (train/prefill) path: chunked_gla.  Decode path: O(1) recurrent
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

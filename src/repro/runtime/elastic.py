@@ -10,7 +10,6 @@ in runtime/stragglers.py.
 """
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

@@ -12,8 +12,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.simmachine import SimMachine
-
 
 def straggler_step_time(*, n_devices: int, chunks_per_device: int,
                         slowdown: float, straggler_fraction: float = 0.02,

@@ -48,6 +48,7 @@ from ..core.acc import AdaptiveCoreChunk
 from ..core.executor import Chunk, SequentialExecutor
 from ..core.feedback import tag_workload
 from ..core.future import Future, when_all
+from ..core.model import DecisionKey, ExecutionModel
 from ..core.properties import params_of
 from ..models import flags, lm
 from ..train.autotune import serve_profiles
@@ -159,6 +160,10 @@ class ServeScheduler:
         sig = (cfg.name, cfg.d_model, cfg.n_layers)
         self.prefill_key = ("serve_prefill",) + sig
         self.decode_key = ("serve_decode",) + sig
+        # Engine key for the per-tick decision: every tick's width/chunk
+        # choice lands in the shared ExecutionModel trace under this key
+        # (--explain-decisions attributes serve ticks through it).
+        self.tick_key = DecisionKey("serve_tick", sig)
         self._rid = itertools.count()
         self._waiting: list[Request] = []
         self._active: list[Request] = []
@@ -202,6 +207,13 @@ class ServeScheduler:
     def pending(self) -> int:
         """Requests not yet finished (waiting + running)."""
         return len(self._waiting) + len(self._active)
+
+    def decision_model(self) -> ExecutionModel | None:
+        """The ExecutionModel engine behind this scheduler's decisions
+        (None when the params object carries no calibration cache, e.g.
+        StaticCoreChunk)."""
+        cache = getattr(self.acc, "cache", None)
+        return ExecutionModel.of(cache) if cache is not None else None
 
     def results(self) -> dict[int, list[int]]:
         return {rid: list(r.out) for rid, r in self.requests.items()
@@ -301,10 +313,20 @@ class ServeScheduler:
             self.executor, self.decode_profile, max(dec_tokens, 1),
             key=self.decode_key)
         t_iter = (pf_tokens * t_pf + dec_tokens * t_dec) / queued
-        cores = self.acc.processing_units_count(self.executor, t_iter,
-                                                queued)
-        chunk = self.acc.get_chunk_size(self.executor, t_iter, cores,
-                                        queued)
+        if hasattr(self.acc, "decide"):
+            # One engine query per tick: cores + chunk in a single traced
+            # decision (equivalent to the two customization-point calls
+            # below — decide() is what both of them derive from).
+            d = self.acc.decide(self.executor, t_iter, queued,
+                                key=self.tick_key,
+                                evidence=(self.prefill_key,
+                                          self.decode_key))
+            cores, chunk = d.n_cores, d.chunk_elems
+        else:
+            cores = self.acc.processing_units_count(self.executor, t_iter,
+                                                    queued)
+            chunk = self.acc.get_chunk_size(self.executor, t_iter, cores,
+                                            queued)
         return queued, max(cores, 1), max(chunk, 1)
 
     # -- prefill -------------------------------------------------------------

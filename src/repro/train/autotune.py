@@ -14,13 +14,13 @@ This is the paper's executor applied at the training-loop level:
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.acc import AdaptiveCoreChunk
 from ..core.calibration import CalibrationCache
 from ..core.cost_model import WorkloadProfile
 from ..core.executor import Executor
+from ..core.model import DecisionKey
 from ..core.overhead_law import AccDecision
 from ..core.properties import params_of
 from ..kernels.autotune import KernelTuner
@@ -89,7 +89,9 @@ def choose_plan(cfg: ArchConfig, shape: ShapeConfig,
     acc = acc or params_of(mesh_exec) or AdaptiveCoreChunk()
     profile = token_profile(cfg, training=(shape.kind == "train"))
     tokens = shape.global_batch * shape.seq_len
-    d = acc.decide_for_profile(mesh_exec, profile, tokens)
+    key = DecisionKey("train_plan", (cfg.name, shape.name,
+                                     shape.global_batch, shape.seq_len))
+    d = acc.decide_for_profile(mesh_exec, profile, tokens, key=key)
 
     dp = d.n_cores
     while dp > 1 and shape.global_batch % dp:
@@ -100,5 +102,13 @@ def choose_plan(cfg: ArchConfig, shape: ShapeConfig,
     accum = max(min(shape.global_batch // max(seqs_per_chunk, 1), max_accum), 1)
     while shape.global_batch % accum or (shape.global_batch // accum) % dp:
         accum -= 1  # snap to a divisor compatible with the dp width
+    microbatch = shape.global_batch // accum
+    # The raw engine decision is already traced (decide_for_profile); the
+    # divisor snapping above changes the shipped numbers, so trace those
+    # too — the dump must attribute what actually runs.
+    acc.model.note(key, policy="train-plan", cores=dp,
+                   chunk=microbatch * shape.seq_len, batch_width=dp, acc=d,
+                   inputs=(("accum", accum), ("microbatch", microbatch),
+                           ("tokens", tokens)))
     return TrainPlan(data_parallel=dp, accum=accum,
-                     microbatch=shape.global_batch // accum, decision=d)
+                     microbatch=microbatch, decision=d)

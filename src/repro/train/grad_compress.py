@@ -17,7 +17,6 @@ error is bounded by 1/127 of the max summed gradient (documented).
 """
 from __future__ import annotations
 
-import functools
 import inspect
 from typing import Callable
 

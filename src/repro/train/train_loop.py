@@ -15,8 +15,7 @@ explicit shard_map DP variant with int8 gradient compression
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

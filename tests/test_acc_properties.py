@@ -1,15 +1,12 @@
 """Property-based tests (hypothesis) for the acc execution-parameters
 object — the system's core invariants."""
-import dataclasses
-
-import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (AdaptiveCoreChunk, SequentialExecutor, SKYLAKE_40,
+from repro.core import (AdaptiveCoreChunk, SequentialExecutor,
                         StaticCoreChunk)
 from repro.core import overhead_law as ol
 from repro.core.simmachine import SimMachine

@@ -1,0 +1,304 @@
+"""ExecutionModel engine: Decision IR, provenance ladder, trace,
+CalibrationCache v3 migration, and the policy unification invariants.
+
+Plain tests run everywhere; the hypothesis property sweeps (determinism
+under a fixed cache state, provenance monotonicity under arbitrary
+operation interleavings) skip when hypothesis is missing — same
+convention as tests/test_acc_properties.py.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import customization as cp
+from repro.core import overhead_law as ol
+from repro.core.acc import AdaptiveCoreChunk
+from repro.core.calibration import SCHEMA_VERSION, CalibrationCache
+from repro.core.executor import SequentialExecutor
+from repro.core.model import (ANALYTIC, MEASURED, ONLINE, Decision,
+                              DecisionKey, ExecutionModel,
+                              default_cores_chunk, provenance_max,
+                              provenance_rank)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Decision IR
+# ---------------------------------------------------------------------------
+
+def test_decision_key_wraps_legacy_tuples_identically():
+    """Legacy workload keys (plain tuples) must keep their exact cache
+    identity through the IR, or every persisted calibration would be
+    orphaned by the unification."""
+    legacy = ("serve_prefill", "qwen3-0.6b", 64, 2)
+    assert DecisionKey.wrap(legacy).cache_key() == legacy
+    assert DecisionKey.wrap(DecisionKey("x", (1,))).cache_key() == ("x", 1)
+    # non-tuple keys (tag_workload accepts any hashable) keep their
+    # identity verbatim: repr("emb") != repr(("emb",)) in the store
+    assert DecisionKey.wrap("emb").cache_key() == "emb"
+    assert DecisionKey.wrap((1, "x")).cache_key() == (1, "x")
+    # typed keys append dtype and hardware after the shape
+    k = DecisionKey("pallas_block", ("rmsnorm", 8192), dtype="float32",
+                    hardware="hw-a")
+    assert k.cache_key() == ("pallas_block", "rmsnorm", 8192, "float32",
+                             "hw-a")
+
+
+def test_decision_inputs_and_explain():
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    d = m.cores_chunk(DecisionKey("serve_tick", ("cfg", 64)),
+                      t_iter=1e-6, count=10_000, t0=1e-5, max_cores=8)
+    assert isinstance(d, Decision)
+    assert d.input("count") == 10_000 and d.input("missing", 42) == 42
+    assert d.acc is not None and d.cores == d.acc.n_cores
+    line = d.explain()
+    assert "serve_tick" in line and "overhead-law" in line
+    assert f"cores={d.cores}" in line
+
+
+def test_engine_shared_per_cache():
+    cache = CalibrationCache()
+    assert ExecutionModel.of(cache) is ExecutionModel.of(cache)
+    assert ExecutionModel.of(CalibrationCache()) is not \
+        ExecutionModel.of(cache)
+    # acc objects and feedback recorders over one cache share the engine
+    acc = AdaptiveCoreChunk(cache=cache)
+    assert acc.model is ExecutionModel.of(cache)
+
+
+def test_trace_records_every_decision_and_bounds():
+    m = ExecutionModel(CalibrationCache(), hardware="test", trace_limit=4)
+    for i in range(6):
+        m.cores_chunk(("k", i), t_iter=1e-6, count=100, t0=1e-5,
+                      max_cores=4)
+    assert m.decisions == 6
+    assert len(m.trace) == 4 and m.trace.dropped == 2
+    text = m.explain()
+    assert "6 decisions" in text and "aged out" in text
+
+
+# ---------------------------------------------------------------------------
+# Determinism: decisions are a pure function of (cache state, inputs)
+# ---------------------------------------------------------------------------
+
+def test_decisions_deterministic_for_fixed_cache_state():
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    kw = dict(t_iter=2e-7, count=1 << 20, t0=1e-5, max_cores=40)
+    d1 = m.cores_chunk(("wl", "a"), **kw)
+    d2 = m.cores_chunk(("wl", "a"), **kw)
+    assert d1 == d2   # frozen dataclasses: full field equality
+    # a cache mutation (online refinement) may change the *next*
+    # decision's provenance but determinism still holds per state
+    m.observe(("wl", "a"), 1024, 1e-3)
+    d3 = m.cores_chunk(("wl", "a"), **kw)
+    d4 = m.cores_chunk(("wl", "a"), **kw)
+    assert d3 == d4 and d3.provenance == ONLINE
+
+
+if HAVE_HYPOTHESIS:
+    times = st.floats(min_value=1e-10, max_value=1e-3, allow_nan=False)
+    counts = st.integers(min_value=1, max_value=10**8)
+
+    @given(t_iter=times, count=counts, t0=times,
+           max_cores=st.integers(1, 4096))
+    @settings(max_examples=100, deadline=None)
+    def test_cores_chunk_deterministic_property(t_iter, count, t0,
+                                                max_cores):
+        m = ExecutionModel(CalibrationCache(), hardware="test")
+        kw = dict(t_iter=t_iter, count=count, t0=t0, max_cores=max_cores)
+        assert m.cores_chunk("wl", **kw) == m.cores_chunk("wl", **kw)
+
+    # Arbitrary interleavings of evidence-producing operations: the
+    # provenance reported for a key must never decrease.
+    ops = st.lists(st.sampled_from(["decide", "measure", "observe"]),
+                   min_size=1, max_size=12)
+
+    @given(ops=ops)
+    @settings(max_examples=100, deadline=None)
+    def test_provenance_monotone_property(ops):
+        m = ExecutionModel(CalibrationCache(), hardware="test")
+        key = ("wl", "p")
+        seen = []
+        for op in ops:
+            if op == "measure":
+                m.measured_t_iter(key, lambda: 1e-6)
+            elif op == "observe":
+                m.observe(key, 128, 1e-3)
+            d = m.cores_chunk(key, t_iter=1e-6, count=10_000, t0=1e-5,
+                              max_cores=8)
+            seen.append(d.provenance)
+        ranks = [provenance_rank(p) for p in seen]
+        assert ranks == sorted(ranks), seen
+
+
+# ---------------------------------------------------------------------------
+# Provenance ladder: analytic -> measured -> online, never down
+# ---------------------------------------------------------------------------
+
+def test_provenance_upgrades_and_never_downgrades():
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    key = ("wl", "ladder")
+    kw = dict(t_iter=1e-6, count=10_000, t0=1e-5, max_cores=8)
+    assert m.cores_chunk(key, **kw).provenance == ANALYTIC
+    m.measured_t_iter(key, lambda: 1e-6)
+    assert m.cores_chunk(key, **kw).provenance == MEASURED
+    m.observe(key, 256, 1e-3)
+    assert m.cores_chunk(key, **kw).provenance == ONLINE
+    # a later one-shot measurement note must not demote the key
+    m.cache.note_provenance(key, MEASURED)
+    assert m.cores_chunk(key, **kw).provenance == ONLINE
+    assert provenance_max(MEASURED, ONLINE) == ONLINE
+    assert provenance_rank(ANALYTIC) < provenance_rank(MEASURED) \
+        < provenance_rank(ONLINE)
+
+
+def test_provenance_survives_persistence(tmp_path):
+    path = os.path.join(tmp_path, "cal.json")
+    m1 = ExecutionModel(CalibrationCache(path), hardware="test")
+    m1.observe(("wl", "x"), 128, 1e-3)
+    m2 = ExecutionModel(CalibrationCache(path), hardware="test")
+    assert m2.provenance_of(("wl", "x")) == ONLINE
+
+
+def test_tick_evidence_counts_toward_provenance():
+    """A serve tick's t_iter blends the prefill/decode calibrations;
+    their provenance must show on the tick decision."""
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    m.observe(("serve_prefill", "cfg"), 64, 1e-3)
+    d = m.cores_chunk(("serve_tick", "cfg"), t_iter=1e-6, count=100,
+                      t0=1e-5, max_cores=4,
+                      evidence=(("serve_prefill", "cfg"),
+                                ("serve_decode", "cfg")))
+    assert d.provenance == ONLINE
+
+
+# ---------------------------------------------------------------------------
+# Measured-search policy through the engine
+# ---------------------------------------------------------------------------
+
+def test_tuned_blocks_search_then_store_hit():
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    key = DecisionKey("pallas_block", ("k", 8192), dtype="float32",
+                      hardware="hw-t")
+    calls = []
+    d1 = m.tuned_blocks(key, [(256,), (512,)],
+                        lambda b: calls.append(b), ("block",))
+    assert d1.provenance == MEASURED and d1.input("measured") is True
+    assert m.searches == 1 and calls
+    n = len(calls)
+    d2 = m.tuned_blocks(key, [(256,), (512,)],
+                        lambda b: calls.append(b), ("block",))
+    assert d2.block_plan == d1.block_plan
+    assert d2.input("measured") is False and m.cache_hits == 1
+    assert len(calls) == n   # no re-measurement
+    # the record's hw field mirrors the key's hardware id
+    assert m.cache.tuned(key.cache_key())["hw"] == "hw-t"
+
+
+# ---------------------------------------------------------------------------
+# CalibrationCache v3: one unified schema, v1/v2 migration
+# ---------------------------------------------------------------------------
+
+def _roundtrip(tmp_path, blob, name):
+    path = os.path.join(tmp_path, name)
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    c = CalibrationCache(path)
+    c.save()
+    with open(path) as f:
+        return c, json.load(f)
+
+
+def test_v1_migrates_to_v3_roundtrip(tmp_path):
+    c, saved = _roundtrip(tmp_path, {
+        "version": 1,
+        "t0": {"('t0', 'SequentialExecutor', 1)": 3.5e-5},
+        "t_iter": {"('wl', 'a')": 2e-6}}, "v1.json")
+    assert saved["version"] == SCHEMA_VERSION
+    assert c.peek_t_iter(("wl", "a")) == pytest.approx(2e-6)
+    # migrated entries carry measured provenance (they were measured
+    # once; online status re-earns itself from live observations)
+    assert c.provenance(("wl", "a")) == MEASURED
+    c2 = CalibrationCache(os.path.join(tmp_path, "v1.json"))
+    assert c2.peek_t_iter(("wl", "a")) == pytest.approx(2e-6)
+    assert c2.t0(("t0", "SequentialExecutor", 1),
+                 lambda: pytest.fail("must not re-measure")) \
+        == pytest.approx(3.5e-5)
+
+
+def test_v2_migrates_to_v3_roundtrip(tmp_path):
+    tuned_key = "('pallas_block', 'k', 1024, 'float32', 'hw-a')"
+    c, saved = _roundtrip(tmp_path, {
+        "version": 2,
+        "t0": {"('t0', 'X', 2)": 1e-5},
+        "t_iter": {"('wl', 'b')": 4e-6},
+        "tuned": {tuned_key: {"block": 256, "hw": "hw-a"}}}, "v2.json")
+    assert saved["version"] == SCHEMA_VERSION
+    assert "entries" in saved and "tuned" not in saved
+    rec = c.tuned(("pallas_block", "k", 1024, "float32", "hw-a"))
+    assert rec == {"block": 256, "hw": "hw-a"}
+    # round-trip again through a fresh cache: values identical
+    c3 = CalibrationCache(os.path.join(tmp_path, "v2.json"))
+    assert c3.peek_t_iter(("wl", "b")) == pytest.approx(4e-6)
+    assert c3.tuned(("pallas_block", "k", 1024, "float32", "hw-a")) == rec
+    assert len(c3) == 3
+
+
+def test_v3_preserves_provenance_on_disk(tmp_path):
+    path = os.path.join(tmp_path, "v3.json")
+    c = CalibrationCache(path)
+    c.smooth_t_iter(("wl", "c"), 1e-6)
+    c.note_provenance(("wl", "c"), ONLINE)
+    blob = json.load(open(path))
+    assert blob["version"] == SCHEMA_VERSION
+    [entry] = [e for e in blob["entries"].values() if "t_iter" in e]
+    assert entry["provenance"] == ONLINE
+    c2 = CalibrationCache(path)
+    assert c2.provenance(("wl", "c")) == ONLINE
+
+
+def test_unknown_future_schema_ignored(tmp_path):
+    path = os.path.join(tmp_path, "future.json")
+    with open(path, "w") as f:
+        json.dump({"version": SCHEMA_VERSION + 1,
+                   "entries": {"'x'": {"t_iter": 1.0}}}, f)
+    assert len(CalibrationCache(path)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Customization-point defaults delegate to the engine's prior policy
+# ---------------------------------------------------------------------------
+
+def test_defaults_route_through_overhead_law():
+    class FakeExec:
+        def num_units(self):
+            return 8
+
+    # all units, equal chunks — and exactly the shared formula's numbers
+    n = cp.processing_units_count(None, FakeExec(), 0.0, 10_000)
+    assert n == default_cores_chunk(10_000, 8).n_cores == 8
+    chunk = cp.get_chunk_size(None, FakeExec(), 0.0, 8, 10_000)
+    assert chunk == default_cores_chunk(10_000, 8).chunk_elems == 1250
+    # the default never opens more units than chunks
+    assert cp.processing_units_count(None, FakeExec(), 0.0, 2) == 2
+
+
+def test_acc_decide_routes_through_engine_trace():
+    """AdaptiveCoreChunk is a front-end: each decide() lands exactly one
+    overhead-law entry in the engine trace with the Overhead-Law record
+    attached."""
+    acc = AdaptiveCoreChunk(t0_override=1e-5)
+    before = acc.model.decisions
+    d = acc.decide(SequentialExecutor(), 1e-6, 50_000, key=("wl", "t"))
+    assert isinstance(d, ol.AccDecision)
+    assert acc.model.decisions == before + 1
+    entry = acc.model.trace.entries("wl")[-1]
+    assert entry.decision.acc == d
+    assert entry.decision.policy == "overhead-law"

@@ -1,13 +1,13 @@
 """Executor API v2: futures, async bulk execution, continuation chaining,
-executor properties, the AdaptiveExecutor, and the deprecation shim."""
+executor properties, the AdaptiveExecutor, and the removed v1 surface."""
 import dataclasses
 import time
-import warnings
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
+from repro.algorithms import detail
 from repro.core import (AdaptiveCoreChunk, AdaptiveExecutor, Chunk,
                         ExecutorAnnotations, Future, HostParallelExecutor,
                         MeshExecutor, SequentialExecutor,
@@ -17,7 +17,6 @@ from repro.core import (AdaptiveCoreChunk, AdaptiveExecutor, Chunk,
                         seq, unwrap_executor, when_all, with_hint,
                         with_params, with_priority)
 from repro.core import customization as cp
-from repro.algorithms import detail
 
 
 @pytest.fixture
@@ -175,32 +174,34 @@ def test_mesh_executor_bulk_raises_unsupported():
 
 
 # ---------------------------------------------------------------------------
-# Deprecated v1 shim
+# Removed v1 surface
 # ---------------------------------------------------------------------------
 
-def test_bulk_sync_execute_shim_warns_exactly_once():
+def test_bulk_sync_execute_removed_with_pointer():
+    """The deprecated v1 shim is gone: access fails hard (AttributeError,
+    so hasattr-style probing sees a v2-only surface) and the message
+    points at the bulk_async_execute spelling."""
     for make in (SequentialExecutor, lambda: HostParallelExecutor(2)):
         ex = make()
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
-            out1 = ex.bulk_sync_execute(lambda c: c.start, make_chunks(4, 2))
-            out2 = ex.bulk_sync_execute(lambda c: c.start, make_chunks(4, 2))
-        deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-        assert len(deps) == 1, deps
-        assert "bulk_async_execute" in str(deps[0].message)
-        assert out1 == out2 == [0, 2]
+        assert not hasattr(ex, "bulk_sync_execute")
+        with pytest.raises(AttributeError, match="bulk_async_execute"):
+            ex.bulk_sync_execute(lambda c: c.start, make_chunks(4, 2))
+        # other missing attributes still raise a plain AttributeError
+        with pytest.raises(AttributeError):
+            ex.no_such_attribute
         if hasattr(ex, "shutdown"):
             ex.shutdown()
 
 
-def test_algorithms_do_not_use_deprecated_shim(host):
+def test_algorithms_run_without_removed_shim(host):
     from repro import algorithms as alg
 
     x = jnp.asarray(np.random.RandomState(0).rand(4096).astype(np.float32))
-    with warnings.catch_warnings():
-        warnings.filterwarnings("error", message="bulk_sync_execute.*")
-        alg.transform(par.on(host).with_(AdaptiveCoreChunk(t0_override=1e-5)),
-                      x, lambda c: c * 2)
+    out = alg.transform(
+        par.on(host).with_(AdaptiveCoreChunk(t0_override=1e-5)),
+        x, lambda c: c * 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2,
+                               rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -203,6 +203,22 @@ def test_attention_variant_keys_separately(tmp_path):
     assert t.searches == 3 and t.cache_hits == 1
 
 
+def test_attention_key_matches_v2_on_disk_order(tmp_path):
+    """Winners persisted by the pre-unification (schema v2) release used
+    (ns, kernel, bsq, bskv, d, dtype, variant, hw) tuples; the engine's
+    DecisionKey must keep that exact identity or every stored
+    flash-attention winner would silently re-measure."""
+    t = _searching_tuner(os.path.join(tmp_path, "cal.json"))
+    legacy_key = ("pallas_block", "fa", 64, 128, 32, "bfloat16",
+                  repr(()), t.hardware)
+    t.cache.set_tuned(legacy_key, {"block_q": 16, "block_kv": 128,
+                                   "hw": t.hardware})
+    bq, bk = t.plan_attention("fa", 64, 128, 32,
+                              lambda q, k: pytest.fail("must not measure"))
+    assert (bq, bk) == (16, 128)
+    assert t.searches == 0 and t.cache_hits == 1
+
+
 def test_illegal_persisted_block_triggers_remeasure(tmp_path):
     """A record with a non-positive block (torn write, buggy peer) must
     fall through to re-measurement, not crash plan math."""
@@ -244,9 +260,12 @@ def test_plan_argument_on_pallas_entry_points():
 
 
 def test_schema_v1_files_still_load(tmp_path):
-    """The v2 bump (additive 'tuned' table) must not discard a user's
-    existing v1 t0/t_iter calibrations."""
+    """Schema bumps (v2 tuned table, v3 unified entries) must not
+    discard a user's existing v1 t0/t_iter calibrations — old files
+    load, and the first save migrates them to the current version."""
     import json
+
+    from repro.core.calibration import SCHEMA_VERSION
 
     path = os.path.join(tmp_path, "cal.json")
     with open(path, "w") as f:
@@ -255,9 +274,9 @@ def test_schema_v1_files_still_load(tmp_path):
     c = CalibrationCache(path)
     assert c.peek_t_iter("b") == pytest.approx(2e-6)
     assert len(c) == 2
-    c.set_tuned(("k",), {"block": 128})   # autosaves as v2
+    c.set_tuned(("k",), {"block": 128})   # autosaves as current schema
     with open(path) as f:
-        assert json.load(f)["version"] == 2
+        assert json.load(f)["version"] == SCHEMA_VERSION
 
 
 def test_schema_roundtrip_through_save_load(tmp_path):

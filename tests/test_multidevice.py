@@ -1,7 +1,6 @@
 """Multi-device paths (8 fake CPU devices, subprocess: jax locks device
 count at first init): mesh algorithms, compressed-DP training, elastic
 resharding, sharding-rule divisibility."""
-import json
 
 import pytest
 

@@ -5,15 +5,10 @@ The container has 1 CPU core, so Figures 1-4 (40-core Skylake / 48-core
 EPYC wall-clock) are reproduced on the calibrated SimMachine; the claims
 tested here are the paper's qualitative + quantitative statements.
 """
-import numpy as np
-import pytest
-
-from repro.core import (ADJACENT_DIFFERENCE, EPYC_48, INTEL_SKYLAKE_40C,
-                        SKYLAKE_40, AdaptiveCoreChunk, artificial_work,
+from repro.core import (ADJACENT_DIFFERENCE, AMD_EPYC_48C, EPYC_48,
+                        INTEL_SKYLAKE_40C, SKYLAKE_40, artificial_work,
                         t_iter_analytic)
 from repro.core import overhead_law as ol
-
-from repro.core import AMD_EPYC_48C
 
 SIZES = [2 ** k for k in range(10, 25, 2)]
 T_ITER_MEM = t_iter_analytic(ADJACENT_DIFFERENCE, INTEL_SKYLAKE_40C)
@@ -124,7 +119,6 @@ def test_claim_acc_avoids_small_workload_slowdown():
     small or quick to benefit from parallelism"."""
     m = SKYLAKE_40
     n = 256
-    t1 = T_ITER_MEM * n
     assert acc_speedup(m, T_ITER_MEM, n) >= 0.999  # never slower than seq
     assert static_speedup(m, T_ITER_MEM, n, 40) < 0.5  # static-40 tanks
 

@@ -50,6 +50,7 @@ def test_admission_fifo_and_deadline_order(setup):
     r_mid = sched.submit(prompt, max_new_tokens=2, arrival=1.0)
     rec = sched.tick()
     assert rec.admitted == (r_first, r_mid)   # two slots, earliest two
+    assert r_late not in rec.admitted         # latest arrival queued
     sched.run_until_idle()
 
     # A tight deadline jumps the arrival queue (EDF).

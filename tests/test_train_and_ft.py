@@ -1,6 +1,5 @@
 """Training loop, checkpointing, fault tolerance, serving integration."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
