@@ -89,6 +89,7 @@ class CalibrationCache:
         self._tuned: dict[str, dict] = {}
         self._provenance: dict[str, str] = {}
         self._lock = threading.Lock()
+        self._last_smooth_save = 0.0
         self.path = path
         if path:
             self.load(path)
@@ -125,18 +126,27 @@ class CalibrationCache:
         ``alpha``:  new = alpha * observed + (1 - alpha) * old.
         Returns the smoothed value now backing decisions for ``key``.
 
-        Persistence is write-throttled: the JSON file is rewritten only
-        when the smoothed value actually moved (> 5% relative), so a
-        converged serving loop stops touching disk — observations arrive
-        per chunk, on the hot path.
+        Persistence is write-throttled two ways: the JSON file is
+        rewritten only when the smoothed value actually moved (> 5%
+        relative), and — for keys that keep moving, e.g. the serve
+        loop's per-tick host-overhead observations, which jitter more
+        than 5% forever — at most once per second.  A converged or
+        merely noisy serving loop stops touching disk; observations
+        arrive per chunk/tick, on the hot path.  The first observation
+        for a key always persists immediately.
         """
         k = _key_str(key)
+        now = time.monotonic()
         with self._lock:
             old = self._t_iter.get(k)
             value = observed if old is None else (
                 alpha * observed + (1.0 - alpha) * old)
             self._t_iter[k] = value
-        if old is None or abs(value - old) > 0.05 * abs(old):
+            moved = old is None or abs(value - old) > 0.05 * abs(old)
+            due = old is None or now - self._last_smooth_save >= 1.0
+            if moved and due:
+                self._last_smooth_save = now
+        if moved and due:
             self._autosave()
         return value
 

@@ -471,6 +471,56 @@ class ExecutionModel:
             inputs=(("t_iter", t_iter), ("count", count), ("t0", t0),
                     ("max_cores", max_cores)) + tuple(inputs)))
 
+    def dispatch_depth(self, key: DecisionKey | Hashable, *,
+                       host_overhead_s: float, device_step_s: float,
+                       max_depth: int,
+                       eff: float = overhead_law.DEFAULT_EFFICIENCY,
+                       evidence: Sequence[Hashable] = (),
+                       inputs: tuple = ()) -> Decision:
+        """Dispatch depth for a fused device loop (decision kind
+        ``serve_dispatch_depth``): how many iterations (decoded tokens)
+        one device dispatch should carry so the fixed host overhead per
+        dispatch amortises to the efficiency target.
+
+        This is the paper's chunk-size floor re-read along the *time*
+        axis: ``host_overhead_s`` is the ``T0`` paid once per dispatch
+        (scheduler bookkeeping, engine queries, jit dispatch, the drain
+        round-trip), ``device_step_s`` the per-iteration ``t_iter``, and
+        the depth is the smallest ``k`` whose device work meets the
+        ``T_opt = E/(1-E) * T0`` floor — at the default E=0.95, the
+        dispatch must carry 19x its own overhead.  Clamped to
+        ``[1, max_depth]`` (the compiled loop's static bound).
+
+        The inputs are expected to come from calibrated/smoothed store
+        entries; ``evidence`` names their keys so the decision's
+        provenance reflects the strongest level backing them (online
+        once the serve loop has timed real dispatches).
+        """
+        import math
+
+        dkey = DecisionKey.wrap(key)
+        prior: AnalyticOverheadLaw = self.policies["prior"]
+        max_depth = max(int(max_depth), 1)
+        if device_step_s > 0.0 and host_overhead_s > 0.0:
+            depth = math.ceil(
+                overhead_law.t_opt(host_overhead_s, eff) / device_step_s)
+        elif host_overhead_s <= 0.0:
+            depth = 1            # free dispatches: no need to fuse
+        else:
+            depth = max_depth    # unknown device time: amortise fully
+        depth = min(max(depth, 1), max_depth)
+        provenance = self.provenance_of(dkey)
+        for ekey in evidence:
+            provenance = provenance_max(provenance,
+                                        self.provenance_of(ekey))
+        return self._finish(Decision(
+            key=dkey, policy=prior.name, provenance=provenance,
+            cores=1, chunk=depth,
+            inputs=(("host_overhead_s", host_overhead_s),
+                    ("device_step_s", device_step_s),
+                    ("max_depth", max_depth), ("eff", eff))
+            + tuple(inputs)))
+
     def default_cores_chunk(self, count: int, max_cores: int) -> AccDecision:
         """The customization-point *default* decision (paper: "splits the
         work into equally sized chunks while utilizing all available
@@ -608,3 +658,36 @@ def default_cores_chunk(count: int, max_cores: int, *,
     return prior.decide(t_iter=0.0, count=max(int(count), 1), t0=0.0,
                         max_cores=max(int(max_cores), 1),
                         chunks_per_core=1)
+
+
+_DECISION_OVERHEAD_S: float | None = None
+
+
+def decision_overhead_s() -> float:
+    """Measured seconds per engine decision on this host, memoised.
+
+    The decision-engine microbench (benchmarks/executor_overhead.py)
+    inlined: an isolated engine answers a warm ``cores_chunk`` query in
+    a tight loop.  Consumers (the serve scheduler's fused-dispatch
+    seeding) use it as the *analytic* component of the host-overhead
+    estimate before any real tick has been timed — a scheduler tick
+    makes a handful of engine queries, so its host floor is a small
+    multiple of this number.
+    """
+    global _DECISION_OVERHEAD_S
+    if _DECISION_OVERHEAD_S is None:
+        engine = ExecutionModel(CalibrationCache())
+        key = DecisionKey("microbench", ())
+
+        def query():
+            engine.cores_chunk(key, t_iter=1e-6, count=4096, t0=1e-5,
+                               max_cores=4)
+
+        for _ in range(8):
+            query()              # warm: caches, code paths
+        n = 64
+        start = time.perf_counter()
+        for _ in range(n):
+            query()
+        _DECISION_OVERHEAD_S = (time.perf_counter() - start) / n
+    return _DECISION_OVERHEAD_S

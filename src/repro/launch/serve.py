@@ -61,6 +61,12 @@ def main() -> None:
     ap.add_argument("--kernel-autotune", action="store_true",
                     help="measured Pallas blocks for prefill/decode "
                          "(winners persist in the calibration cache)")
+    ap.add_argument("--dispatch-depth", default="auto",
+                    help="fused decode tokens per device dispatch: "
+                         "'auto' (adaptive serve_dispatch_depth decision, "
+                         "default), an integer (fixed depth), or 'off' "
+                         "(legacy per-tick decode, one round-trip per "
+                         "token)")
     ap.add_argument("--explain-decisions", action="store_true",
                     help="dump the ExecutionModel decision trace: every "
                          "serve-tick and kernel-block choice with the "
@@ -92,8 +98,12 @@ def main() -> None:
             print(ExecutionModel.of(cache).explain())
         return
     max_len = args.prompt_len + args.new_tokens + 1
+    depth = args.dispatch_depth.strip().lower()
+    depth = None if depth in ("off", "none", "0") else \
+        depth if depth == "auto" else int(depth)
     sched = ServeScheduler(cfg, params, n_slots=args.slots, max_len=max_len,
-                           executor=executor, kernel_tuner=tuner)
+                           executor=executor, kernel_tuner=tuner,
+                           dispatch_depth=depth)
     sched.warmup()
 
     # Jittered prompt lengths: requests join and leave the batch at
@@ -115,7 +125,11 @@ def main() -> None:
              for rid in rids]
     gen = sum(len(outs[rid]) for rid in rids)
     print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
-          f"ticks={len(sched.trace)}")
+          f"ticks={len(sched.trace)} dispatch-depth={args.dispatch_depth} "
+          f"({sched.decode_dispatches} decode dispatches, "
+          f"{sched.host_roundtrips} host round-trips, "
+          f"{gen and sched.host_overhead_s / gen * 1e3:.2f}ms host "
+          f"overhead/token)")
     print(f"generated {gen} tokens in {dt:.2f}s ({gen / dt:.1f} tok/s) | "
           f"latency p50={percentile(lats, 50) * 1e3:.0f}ms "
           f"p95={percentile(lats, 95) * 1e3:.0f}ms | "

@@ -1,3 +1,5 @@
+from .decode_loop import (DEFAULT_MAX_DEPTH, make_fused_decode_step,
+                          make_lane_step, masked_merge)
 from .engine import (ServeEngine, make_decode_step, make_prefill_step,
                      prefill_segments)
 from .kv_cache import SlotKVCachePool
@@ -10,4 +12,6 @@ __all__ = [
     "SlotKVCachePool",
     "ServeScheduler", "Request", "RequestState", "TickRecord",
     "percentile",
+    "DEFAULT_MAX_DEPTH", "make_fused_decode_step", "make_lane_step",
+    "masked_merge",
 ]

@@ -1,0 +1,138 @@
+"""Fused on-device decode loop: ``k`` tokens per dispatch, donated buffers.
+
+The scheduler's legacy decode path pays the worst dispatch granularity
+the paper warns about: one device round-trip per decoded token —
+``block_until_ready`` + ``device_get`` every tick, plus a fresh jit
+dispatch (params-pytree flatten, executor future machinery, two engine
+queries) per token.  On small models the host overhead is a large
+fraction of the step time, and it is *fixed per dispatch* — exactly the
+``T0`` of the paper's Overhead Law, re-read along the time axis.
+
+This module is the fused alternative: one compiled ``lax.fori_loop``
+advances every slot in the pool by up to ``k`` tokens per dispatch.
+
+* **Dynamic trip count** — the loop bound is ``max(steps)`` where
+  ``steps`` rides in as data, so a single compilation serves every
+  depth ``k <= max_depth`` (no per-depth recompiles; ``fori_loop`` with
+  a traced bound lowers to ``while``).
+* **Masked early-exit** — each lane carries its remaining-step budget;
+  a lane whose budget hits zero (request finished mid-loop, or its slot
+  cache is full) stops merging cache writes and stops advancing, just
+  like an inactive lane in the legacy per-tick step.
+* **Donated slot buffers** — the whole cache pool is donated into the
+  fused step (``donate_argnums``), extending the donation pattern of
+  ``SlotKVCachePool.write_slot``: XLA aliases the output pool into the
+  input buffers, so a decode dispatch allocates no new cache storage.
+* **Device-resident token chain** — the final per-lane tokens come back
+  as a device array that feeds the *next* dispatch directly, so the
+  host never has to sync a token to keep the loop going; emitted tokens
+  are drained asynchronously by the scheduler.
+
+Token semantics are identical to the per-tick path: the per-lane step is
+the same ``lane`` computation (shared with ``ServeScheduler``'s legacy
+``_decode_step`` via ``make_lane_step``), greedy argmax, same masked
+cache merge — a lane may compute garbage past its stop point but never
+merges or emits it.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import flags, lm
+
+# One compiled fused step serves every depth up to this; the scheduler
+# clamps adaptive depth decisions against it.
+DEFAULT_MAX_DEPTH = 32
+
+
+def make_lane_step(cfg: ArchConfig, *, window: int | None = None,
+                   kernel_tuner=None) -> Callable:
+    """The per-slot decode lane, vmapped over the pool.
+
+    ``lanes(params, caches, toks, poss) -> (next_toks, new_caches)``
+    where every leading dim is ``n_slots``.  Both the legacy per-tick
+    step and the fused loop body call exactly this function, so their
+    per-step numerics cannot diverge.
+    """
+
+    def lane(params, row_caches, tok, pos):
+        caches = jax.tree.map(
+            lambda x: None if x is None else x[None], row_caches,
+            is_leaf=lambda x: x is None)
+        with flags.kernel_tuner(kernel_tuner or flags.KERNEL_TUNER):
+            logits, new = lm.forward_cached(
+                params, tok[None, None], caches, pos, cfg, window=window)
+        squeezed = jax.tree.map(
+            lambda x: None if x is None else x[0], new,
+            is_leaf=lambda x: x is None)
+        return jnp.argmax(logits[0, 0], axis=-1), squeezed
+
+    return jax.vmap(lane, in_axes=(None, 0, 0, 0))
+
+
+def masked_merge(caches, new_caches, active):
+    """Keep ``new`` rows only for active lanes: inactive lanes (free
+    slots, mid-prefill slots, lanes past their stop point) must not see
+    their KV rows or recurrent states advanced by the garbage token
+    their lane computed."""
+
+    def keep(old, new):
+        if old is None:
+            return None
+        a = active.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(a, new, old)
+
+    return jax.tree.map(keep, caches, new_caches,
+                        is_leaf=lambda x: x is None)
+
+
+def make_fused_decode_step(cfg: ArchConfig, *, window: int | None = None,
+                           kernel_tuner=None,
+                           max_depth: int = DEFAULT_MAX_DEPTH) -> Callable:
+    """Build the jitted fused decode step.
+
+    ``fused(params, caches, toks, poss, steps)`` advances lane ``i`` by
+    ``steps[i]`` greedy tokens (``0 <= steps[i] <= max_depth``) and
+    returns ``(new_caches, out_buf, final_toks)``:
+
+    * ``new_caches`` — the pool after all merged writes (the input pool
+      is **donated**; the caller must rebind it);
+    * ``out_buf``    — ``(max_depth, n_slots)`` int32; row ``j`` holds
+      lane ``i``'s ``j``-th emitted token for ``j < steps[i]`` (rows at
+      and past a lane's budget repeat its last token — the scheduler
+      truncates at each request's stop point);
+    * ``final_toks`` — each lane's last token, ready to feed the next
+      dispatch without a host round-trip.
+
+    The loop runs ``max(steps)`` iterations (a traced bound: one
+    compilation for all depths), so idle lanes never stretch the trip
+    count beyond the deepest active budget.
+    """
+    lanes = make_lane_step(cfg, window=window, kernel_tuner=kernel_tuner)
+    max_depth = max(int(max_depth), 1)
+
+    def fused(params, caches, toks, poss, steps):
+        n = toks.shape[0]
+        out_buf = jnp.zeros((max_depth, n), jnp.int32)
+
+        def body(j, carry):
+            caches, toks, poss, rem, out_buf = carry
+            active = rem > 0
+            next_toks, new_caches = lanes(params, caches, toks, poss)
+            caches = masked_merge(caches, new_caches, active)
+            toks = jnp.where(active, next_toks, toks)
+            out_buf = out_buf.at[j].set(toks)
+            step = active.astype(poss.dtype)
+            return caches, toks, poss + step, rem - step, out_buf
+
+        trip = jnp.minimum(jnp.max(steps), max_depth)
+        caches, toks, _, _, out_buf = jax.lax.fori_loop(
+            0, trip, body, (caches, toks, poss,
+                            jnp.minimum(steps, max_depth), out_buf))
+        return caches, out_buf, toks
+
+    return jax.jit(fused, donate_argnums=(1,))

@@ -93,7 +93,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch: int, max_len: int,
                  window: int | None = None,
                  acc: AdaptiveCoreChunk | None = None,
-                 executor=None, kernel_tuner=None):
+                 executor=None, kernel_tuner=None,
+                 dispatch_depth: int | str | None = None):
         self.cfg = cfg
         self.params = params
         self.window = window if window is not None else cfg.attn_window
@@ -109,6 +110,10 @@ class ServeEngine:
         # Opt-in measured Pallas blocks for prefill/decode (tentpole
         # feedback loop); None keeps the analytic/jnp paths untouched.
         self.kernel_tuner = kernel_tuner
+        # Fused decode loop (serve/decode_loop.py): None = per-tick
+        # decode, int = fixed tokens per dispatch, "auto" = adaptive
+        # serve_dispatch_depth decisions.  Scheduler path only.
+        self.dispatch_depth = dispatch_depth
         self._decode = jax.jit(make_decode_step(
             cfg, window=self.window, kernel_tuner=kernel_tuner))
         self._sched = None   # lazily built, reused across generate() calls
@@ -195,7 +200,8 @@ class ServeEngine:
             self._sched = ServeScheduler(
                 self.cfg, self.params, n_slots=bsz, max_len=self.max_len,
                 window=self.window, executor=self.executor, acc=self.acc,
-                kernel_tuner=self.kernel_tuner)
+                kernel_tuner=self.kernel_tuner,
+                dispatch_depth=self.dispatch_depth)
         rids = [self._sched.submit(prompt[i], max_new_tokens=n_new)
                 for i in range(bsz)]
         outs = self._sched.run_until_idle()

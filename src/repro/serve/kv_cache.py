@@ -121,6 +121,30 @@ class SlotKVCachePool:
         self.caches = self._write_jit(self.caches, row_caches,
                                       jnp.int32(slot))
 
+    def adopt(self, new_caches) -> None:
+        """Rebind the pool to ``new_caches`` — the output of a step that
+        **donated** the current pool (the fused decode loop,
+        serve/decode_loop.py, like ``write_slot`` above).  The old
+        arrays' buffers were aliased into the new ones by XLA; after
+        this call the previous ``self.caches`` must never be touched
+        again.  No allocation happens: ``allocations`` stays wherever
+        it is (the invariant the donation tests pin at 1)."""
+        self.caches = new_caches
+
+    def advance(self, slot: int, n: int) -> int:
+        """Advance ``slot``'s position by ``n`` cached tokens (the fused
+        decode path moves a slot by up to ``k`` per dispatch).  The
+        caller must have budgeted ``n`` against ``max_len``; overshoot
+        would mean cache writes past the slot's storage."""
+        if n < 0:
+            raise ValueError(f"negative advance: {n}")
+        pos = self.positions[slot] + n
+        if pos > self.max_len:
+            raise ValueError(
+                f"slot {slot} advanced past max_len: {pos} > {self.max_len}")
+        self.positions[slot] = pos
+        return pos
+
     def positions_array(self) -> jax.Array:
         """Per-slot positions as an (n_slots,) int32 device array (free
         slots report 0; their decode lanes are ignored)."""

@@ -29,11 +29,23 @@ Mechanics:
   are vmapped, and inactive lanes' cache writes are masked out — so
   requests of any length mix in one batch with zero recompilation and
   zero cache reallocation.
+* With ``dispatch_depth`` set, decode runs through the **fused
+  on-device loop** (serve/decode_loop.py): up to ``k`` tokens per
+  dispatch with donated cache buffers, the host pipelined one dispatch
+  ahead of the device and emitted tokens drained asynchronously — the
+  per-token ``block_until_ready`` + ``device_get`` of the per-tick path
+  disappears.  ``k`` is an ExecutionModel decision
+  (``serve_dispatch_depth``): the measured host overhead per tick is
+  the Overhead Law's T0, the measured device time per token its
+  t_iter, and the depth is the chunk that amortises one to the other.
 * Everything is deterministic under ``SequentialExecutor`` (tick trace is
-  a pure function of arrivals), which is what the tests pin down.
+  a pure function of arrivals), which is what the tests pin down; the
+  fused path emits token-identical output (greedy decode over the same
+  per-lane step — see decode_loop.make_lane_step).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
 import itertools
@@ -44,14 +56,17 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core import overhead_law
 from ..core.acc import AdaptiveCoreChunk
 from ..core.executor import Chunk, SequentialExecutor
 from ..core.feedback import tag_workload
 from ..core.future import Future, when_all
-from ..core.model import DecisionKey, ExecutionModel
+from ..core.model import DecisionKey, ExecutionModel, decision_overhead_s
 from ..core.properties import params_of
 from ..models import flags, lm
 from ..train.autotune import serve_profiles
+from .decode_loop import (DEFAULT_MAX_DEPTH, make_fused_decode_step,
+                          make_lane_step, masked_merge)
 from .kv_cache import SlotKVCachePool
 
 DEFAULT_CHUNK_BUCKETS = (8, 16, 32, 64, 128, 256)
@@ -86,6 +101,10 @@ class Request:
     slot: int | None = None
     prefilled: int = 0              # prompt tokens already in the cache
     out: list[int] = dataclasses.field(default_factory=list)
+    # Tokens dispatched to the device but not yet drained to ``out``
+    # (fused decode path): the scheduling budget counts them, the
+    # emitted output gains them only when their buffer is harvested.
+    pending_out: int = 0
     first_token_at: float | None = None
     finished_at: float | None = None
 
@@ -110,6 +129,7 @@ class TickRecord:
     queued_tokens: int
     n_cores: int
     chunk: int
+    depth: int = 0       # fused dispatch depth (0: per-tick decode path)
 
 
 class ServeScheduler:
@@ -120,7 +140,10 @@ class ServeScheduler:
                  executor=None, acc: AdaptiveCoreChunk | None = None,
                  chunk_buckets: Sequence[int] = DEFAULT_CHUNK_BUCKETS,
                  clock: Callable[[], float] = time.monotonic,
-                 kernel_tuner=None):
+                 kernel_tuner=None,
+                 dispatch_depth: int | str | None = None,
+                 max_dispatch_depth: int = DEFAULT_MAX_DEPTH,
+                 pipeline: int = 2, sync_every: int = 8):
         kinds = set(cfg.layer_kinds())
         if "cross_attn" in kinds:
             raise ValueError(
@@ -164,6 +187,41 @@ class ServeScheduler:
         # choice lands in the shared ExecutionModel trace under this key
         # (--explain-decisions attributes serve ticks through it).
         self.tick_key = DecisionKey("serve_tick", sig)
+        # Fused decode hot path (serve/decode_loop.py).  ``dispatch_depth``
+        # is None (per-tick decode, one device round-trip per token),
+        # an int (fixed depth), or "auto" (per-tick engine decision of
+        # kind ``serve_dispatch_depth``).
+        if isinstance(dispatch_depth, str):
+            if dispatch_depth != "auto":
+                raise ValueError(
+                    f"dispatch_depth must be None, an int, or 'auto'; "
+                    f"got {dispatch_depth!r}")
+        elif dispatch_depth is not None:
+            dispatch_depth = max(int(dispatch_depth), 1)
+        self.dispatch_depth = dispatch_depth
+        self._fused = dispatch_depth is not None
+        self.max_dispatch_depth = max(int(max_dispatch_depth), 1)
+        self.pipeline = max(int(pipeline), 1)
+        self.sync_every = max(int(sync_every), 1)
+        self.depth_key = DecisionKey("serve_dispatch_depth", sig)
+        # Timing keys for the depth decision's two inputs (both refined
+        # online): seconds of host work per tick, seconds of device
+        # work per fused-decoded token.
+        self.host_tick_key = ("serve_host_tick",) + sig
+        self.fused_key = ("serve_decode_fused",) + sig
+        self._fused_jit = None
+        self._warm_fused = False
+        self._dev_toks = None       # device-resident last-token carry
+        self._tok_overrides: dict[int, int] = {}
+        # In-flight fused dispatches: (out_buf, [(req, slot, take)...]).
+        self._inflight: collections.deque = collections.deque()
+        # Dispatch-granularity telemetry (benchmarks/serve_throughput.py
+        # derives host-overhead-per-token and dispatches-per-token).
+        self.decode_dispatches = 0
+        self.decode_tokens = 0
+        self.host_roundtrips = 0    # block/device_get events, all paths
+        self.host_overhead_s = 0.0  # tick wall-clock minus device waits
+        self._blocked_s = 0.0
         self._rid = itertools.count()
         self._waiting: list[Request] = []
         self._active: list[Request] = []
@@ -216,6 +274,7 @@ class ServeScheduler:
         return ExecutionModel.of(cache) if cache is not None else None
 
     def results(self) -> dict[int, list[int]]:
+        self.flush()   # fused path: land every dispatched-but-undrained token
         return {rid: list(r.out) for rid, r in self.requests.items()
                 if r.state is RequestState.DONE}
 
@@ -224,6 +283,7 @@ class ServeScheduler:
         callers (the ServeEngine facade) call this after draining —
         otherwise every prompt and TickRecord ever served stays
         reachable."""
+        self.flush()   # a DONE request's tokens may still be in flight
         self.requests = {rid: r for rid, r in self.requests.items()
                          if r.state is not RequestState.DONE}
         self.trace.clear()
@@ -236,26 +296,73 @@ class ServeScheduler:
         raise RuntimeError(f"scheduler did not drain in {max_ticks} ticks")
 
     def warmup(self) -> None:
-        """Compile the decode step and the largest prefill bucket so the
-        first timed tick measures compute, not compilation."""
-        self._decode_step()(
-            self.params, self.pool.caches,
-            jnp.zeros(self.pool.n_slots, jnp.int32),
-            self.pool.positions_array(),
-            jnp.zeros(self.pool.n_slots, dtype=bool))
-        self._warm_decode = True
+        """Compile everything the steady-state tick path touches — the
+        decode step, the prefill buckets, the donated slot write-back
+        and the first-token argmax — so the first timed tick measures
+        compute, not compilation."""
+        if self._fused:
+            # One compile serves every depth (dynamic trip count); the
+            # zero-step call donates and returns the pool unchanged.
+            self._tok_overrides[0] = 0   # compile the override splice
+            new_caches, out_buf, toks = self._fused_step()(
+                self.params, self.pool.caches, self._decode_toks(),
+                self.pool.positions_array(),
+                jnp.zeros(self.pool.n_slots, jnp.int32))
+            jax.block_until_ready(out_buf)
+            self.pool.adopt(new_caches)
+            self._dev_toks = toks
+            self._warm_fused = True
+        else:
+            self._decode_step()(
+                self.params, self.pool.caches,
+                jnp.zeros(self.pool.n_slots, jnp.int32),
+                self.pool.positions_array(),
+                jnp.zeros(self.pool.n_slots, dtype=bool))
+            self._warm_decode = True
         if self._pad_ok:
+            warmed = None
             for b in self.chunk_buckets:
                 if b < self.max_len:
                     row = self.pool.read_slot(0)
-                    self._prefill_step(b)(
+                    warmed = self._prefill_step(b)(
                         self.params, row, jnp.zeros((1, b), jnp.int32),
                         jnp.int32(0), jnp.int32(b - 1))
                     self._warm_prefill.add(b)
+            if warmed is not None:
+                # Slot 0 is free here (warmup precedes admission) and
+                # masking hides the garbage row: writing it back
+                # compiles the donated write-back and the first-token
+                # argmax the real prefill path goes through.
+                logits, new_row = warmed
+                int(jnp.argmax(logits[0, 0]))
+                self.pool.write_slot(0, new_row)
 
     # ----------------------------------------------------------------- tick
     def tick(self) -> TickRecord:
-        """One scheduler round: admit → decide → prefill chunks → decode."""
+        """One scheduler round: admit → decide → prefill chunks → decode.
+
+        The wall-clock of everything that is *not* a device wait is
+        accumulated as ``host_overhead_s`` — the per-dispatch T0 the
+        fused path amortises.  On fused decode-only ticks it is also
+        folded into the calibration store (``serve_host_tick``), which
+        is what drives the next ``serve_dispatch_depth`` decision.
+        """
+        t_start = time.perf_counter()
+        self._blocked_s = 0.0
+        was_warm = self._warm_fused
+        rec = self._tick_fused() if self._fused else self._tick_legacy()
+        host_s = max(time.perf_counter() - t_start - self._blocked_s, 0.0)
+        self.host_overhead_s += host_s
+        if self._fused and was_warm and rec.decoded and not rec.prefill_ops:
+            # Clean sample: no prefill compute and no cold compiles in
+            # the window, so host_s is pure scheduling overhead.
+            model = self.decision_model()
+            if model is not None:
+                model.observe(self.host_tick_key, 1, host_s)
+        return rec
+
+    def _tick_legacy(self) -> TickRecord:
+        """Per-tick decode: one device round-trip per decoded token."""
         admitted = self._admit()
         queued, cores, chunk = self._decide()
         prefill_ops, pf_finished = self._run_prefill(cores, chunk)
@@ -268,6 +375,44 @@ class ServeScheduler:
             prefill_ops=tuple(prefill_ops), decoded=tuple(decoded),
             finished=tuple(finished), queued_tokens=queued,
             n_cores=cores, chunk=chunk)
+        self.trace.append(rec)
+        self._tick += 1
+        return rec
+
+    def _tick_fused(self) -> TickRecord:
+        """Fused decode: admission and accounting run decoupled from the
+        device stream.  The tick harvests whatever finished dispatches
+        are ready (blocking only to bound the pipeline), runs prefill as
+        before, then dispatches the next fused decode without waiting
+        for it — tick N+1's host work overlaps tick N's device work."""
+        self._drain(drop_to=self.pipeline - 1, harvest=True)
+        admitted = self._admit()
+        pf_pending = any(r.state is RequestState.PREFILL
+                         for r in self._active)
+        if pf_pending:
+            queued, cores, chunk = self._decide()
+            prefill_ops, pf_finished = self._run_prefill(cores, chunk)
+        else:
+            # Decode-only tick: skip the prefill width/chunk query — on
+            # the fused hot path those engine calls are host overhead.
+            queued = sum(1 for r in self._active
+                         if r.state is RequestState.DECODE)
+            cores, chunk = 0, 0
+            prefill_ops, pf_finished = [], []
+        decoded, dec_finished, depth = self._dispatch_decode()
+        finished = pf_finished + dec_finished
+        self._active = [r for r in self._active
+                        if r.state is not RequestState.DONE]
+        if not self._active and not self._waiting:
+            # Going idle: nothing left to overlap the pipeline with, so
+            # land every in-flight token now — finished_at must mean
+            # "tokens on the host", not "whenever the next tick drains".
+            self.flush()
+        rec = TickRecord(
+            tick=self._tick, admitted=tuple(admitted),
+            prefill_ops=tuple(prefill_ops), decoded=tuple(decoded),
+            finished=tuple(finished), queued_tokens=queued,
+            n_cores=cores, chunk=chunk, depth=depth)
         self.trace.append(rec)
         self._tick += 1
         return rec
@@ -399,9 +544,12 @@ class ServeScheduler:
         # never-executed chunk width runs untimed (it compiles).
         if all(padded in self._warm_prefill for _, _, padded in ops):
             tag_workload(run_chunk, self.prefill_key)
+        t_dev = time.perf_counter()
         futs = self.executor.bulk_async_execute(
             run_chunk, [Chunk(i, step) for i, (_, step, _) in enumerate(ops)])
         outs = when_all(futs).result()
+        self._blocked_s += time.perf_counter() - t_dev
+        self.host_roundtrips += 1
         self._warm_prefill.update(padded for _, _, padded in ops)
 
         # Cache writes and state transitions happen on the caller's
@@ -420,43 +568,24 @@ class ServeScheduler:
                 if len(req.out) >= req.max_new_tokens:
                     self._finish(req)
                     finished.append(req.rid)
+                elif self._fused:
+                    # The host knows this slot's next input token; the
+                    # device carry learns it at the next dispatch.
+                    self._tok_overrides[req.slot] = tok
         return prefill_ops, finished
 
-    # -- decode --------------------------------------------------------------
+    # -- decode (per-tick path) ---------------------------------------------
     def _decode_step(self):
         if self._decode_jit is None:
-            cfg, window = self.cfg, self.window
-
-            def lane(params, row_caches, tok, pos):
-                caches = jax.tree.map(
-                    lambda x: None if x is None else x[None], row_caches,
-                    is_leaf=lambda x: x is None)
-                with flags.kernel_tuner(self.kernel_tuner
-                                        or flags.KERNEL_TUNER):
-                    logits, new = lm.forward_cached(
-                        params, tok[None, None], caches, pos, cfg,
-                        window=window)
-                squeezed = jax.tree.map(
-                    lambda x: None if x is None else x[0], new,
-                    is_leaf=lambda x: x is None)
-                return jnp.argmax(logits[0, 0], axis=-1), squeezed
-
-            lanes = jax.vmap(lane, in_axes=(None, 0, 0, 0))
+            # The per-lane step is shared with the fused loop
+            # (decode_loop.make_lane_step), so the two paths cannot
+            # drift numerically — token identity is by construction.
+            lanes = make_lane_step(self.cfg, window=self.window,
+                                   kernel_tuner=self.kernel_tuner)
 
             def decode_all(params, caches, toks, poss, active):
                 next_toks, new_caches = lanes(params, caches, toks, poss)
-                # Masked merge: inactive lanes (free or mid-prefill
-                # slots) must not see their KV rows or recurrent states
-                # advanced by the garbage token their lane decoded.
-                def keep(old, new):
-                    if old is None:
-                        return None
-                    a = active.reshape((-1,) + (1,) * (old.ndim - 1))
-                    return jnp.where(a, new, old)
-
-                merged = jax.tree.map(keep, caches, new_caches,
-                                      is_leaf=lambda x: x is None)
-                return next_toks, merged
+                return next_toks, masked_merge(caches, new_caches, active)
 
             self._decode_jit = jax.jit(decode_all)
         return self._decode_jit
@@ -484,11 +613,16 @@ class ServeScheduler:
 
         if self._warm_decode:   # cold call compiles; keep it untimed
             tag_workload(run_decode, self.decode_key, elems=len(decs))
+        t_dev = time.perf_counter()
         fut = self.executor.then_execute(run_decode, Future.ready(None))
         self._warm_decode = True
         next_toks, new_caches = fut.result()
         self.pool.caches = new_caches
         next_toks = jax.device_get(next_toks)
+        self._blocked_s += time.perf_counter() - t_dev
+        self.decode_dispatches += 1
+        self.decode_tokens += len(decs)
+        self.host_roundtrips += 2   # block_until_ready + device_get
 
         decoded, finished = [], []
         for r in decs:
@@ -501,8 +635,175 @@ class ServeScheduler:
                 finished.append(r.rid)
         return decoded, finished
 
+    # -- decode (fused path) -------------------------------------------------
+    def _fused_step(self):
+        if self._fused_jit is None:
+            self._fused_jit = make_fused_decode_step(
+                self.cfg, window=self.window,
+                kernel_tuner=self.kernel_tuner,
+                max_depth=self.max_dispatch_depth)
+        return self._fused_jit
+
+    def _decode_toks(self) -> jax.Array:
+        """The device-resident last-token carry, with any host-known
+        updates (prefill-emitted first tokens) spliced in.  The splice
+        is a dense ``where`` over the (tiny) slot vector — a scatter
+        with dynamic indices costs a two-orders-of-magnitude larger
+        one-time compile for no win at this size."""
+        if self._dev_toks is None:
+            self._dev_toks = jnp.zeros(self.pool.n_slots, jnp.int32)
+        if self._tok_overrides:
+            n = self.pool.n_slots
+            mask = [False] * n
+            vals = [0] * n
+            for slot, tok in self._tok_overrides.items():
+                mask[slot] = True
+                vals[slot] = tok
+            self._dev_toks = jnp.where(jnp.asarray(mask),
+                                       jnp.asarray(vals, jnp.int32),
+                                       self._dev_toks)
+            self._tok_overrides.clear()
+        return self._dev_toks
+
+    def _decide_depth(self, decs) -> int:
+        """Tokens per dispatch for this tick — the ``serve_dispatch_depth``
+        decision.  Fixed depths are traced as such; ``auto`` asks the
+        engine to amortise the measured host tick overhead against the
+        measured device step time (seeded, before any observation, from
+        the calibrated empty-dispatch T0 plus the decision-engine
+        microbench's per-query cost — the host work a tick provably
+        pays)."""
+        model = self.decision_model()
+        if self.dispatch_depth != "auto":
+            depth = min(self.dispatch_depth, self.max_dispatch_depth)
+            if model is not None:
+                model.note(self.depth_key, policy="fixed-depth",
+                           cores=1, chunk=depth,
+                           inputs=(("fixed", True),))
+            return depth
+        if model is None:     # static params object: no store to consult
+            return min(8, self.max_dispatch_depth)
+        evidence = [self.host_tick_key, self.fused_key]
+        inputs: tuple = ()
+        host = model.smoothed_t_iter(self.host_tick_key)
+        if host is None:
+            t0 = self.acc.calibrate_t0(self.executor)
+            host = t0 + 4.0 * decision_overhead_s()
+            inputs = (("seeded", True),)
+        dev = model.smoothed_t_iter(self.fused_key)
+        if dev is None:
+            # Fall back to the per-tick decode key's smoothed value, or
+            # the analytic roofline profile behind it.
+            dev = self.acc.measure_iteration(
+                self.executor, self.decode_profile, max(len(decs), 1),
+                key=self.decode_key)
+            evidence.append(self.decode_key)
+        decision = model.dispatch_depth(
+            self.depth_key, host_overhead_s=host, device_step_s=dev,
+            max_depth=self.max_dispatch_depth,
+            eff=getattr(self.acc, "efficiency",
+                        overhead_law.DEFAULT_EFFICIENCY),
+            evidence=tuple(evidence), inputs=inputs)
+        return decision.chunk
+
+    def _dispatch_decode(self):
+        """Dispatch one fused decode step (no sync): every DECODE slot
+        advances by up to the decided depth, clamped to its remaining
+        token budget and cache room, with finish bookkeeping done
+        immediately — the tokens themselves land later via ``_drain``."""
+        decs = [r for r in self._active if r.state is RequestState.DECODE]
+        if not decs:
+            return [], [], 0
+        depth = self._decide_depth(decs)
+        steps = [0] * self.pool.n_slots
+        lanes = []
+        for r in decs:
+            budget = min(r.max_new_tokens - len(r.out) - r.pending_out,
+                         self.max_len - self.pool.positions[r.slot])
+            take = min(depth, budget)
+            steps[r.slot] = take
+            lanes.append((r, r.slot, take))
+        toks_a = self._decode_toks()
+        poss_a = self.pool.positions_array()
+        steps_a = jnp.asarray(steps, jnp.int32)
+        fused = self._fused_step()
+        # Periodic synced dispatch: the only way to wall-clock the
+        # device step honestly is with an empty pipeline around it.
+        timed = self._warm_fused and \
+            self.decode_dispatches % self.sync_every == 0
+        if timed:
+            self._drain(drop_to=0)
+        t_dev = time.perf_counter()
+        new_caches, out_buf, final_toks = fused(
+            self.params, self.pool.caches, toks_a, poss_a, steps_a)
+        total = sum(take for _, _, take in lanes)
+        if timed:
+            jax.block_until_ready(out_buf)
+            dt = time.perf_counter() - t_dev
+            self._blocked_s += dt
+            self.host_roundtrips += 1
+            model = self.decision_model()
+            if model is not None and total > 0:
+                model.observe(self.fused_key, total, dt)
+        self._warm_fused = True
+        self.pool.adopt(new_caches)
+        self._dev_toks = final_toks
+        self.decode_dispatches += 1
+        self.decode_tokens += total
+        self._inflight.append((out_buf, lanes))
+
+        decoded, finished = [], []
+        for r, slot, take in lanes:
+            self.pool.advance(slot, take)
+            r.pending_out += take
+            decoded.append(r.rid)
+            if len(r.out) + r.pending_out >= r.max_new_tokens \
+                    or self.pool.positions[slot] >= self.max_len:
+                self._finish(r)
+                finished.append(r.rid)
+        return decoded, finished, depth
+
+    def _drain(self, drop_to: int | None = None,
+               harvest: bool = False) -> None:
+        """Land emitted tokens from finished fused dispatches.
+
+        ``drop_to=N`` blocks until at most ``N`` dispatches remain in
+        flight (the pipeline bound); ``harvest`` additionally pops any
+        buffer that is already materialised, without blocking.  One
+        ``device_get`` per dispatch — the fused path's only routine
+        host round-trip."""
+        while self._inflight:
+            must = drop_to is not None and len(self._inflight) > drop_to
+            if not must:
+                if not harvest:
+                    break
+                probe = getattr(self._inflight[0][0], "is_ready", None)
+                if probe is not None and not probe():
+                    break
+            out_buf, lanes = self._inflight.popleft()
+            t_dev = time.perf_counter()
+            toks = jax.device_get(out_buf)
+            if must:
+                self._blocked_s += time.perf_counter() - t_dev
+            self.host_roundtrips += 1
+            for req, slot, take in lanes:
+                req.out.extend(int(toks[j, slot]) for j in range(take))
+                req.pending_out -= take
+                if req.state is RequestState.DONE \
+                        and req.pending_out <= 0 \
+                        and req.finished_at is None:
+                    req.out = req.out[:req.max_new_tokens]
+                    req.finished_at = self.clock()
+
+    def flush(self) -> None:
+        """Block until every in-flight fused dispatch has drained."""
+        self._drain(drop_to=0)
+
     def _finish(self, req: Request) -> None:
-        req.out = req.out[:req.max_new_tokens]
-        req.finished_at = self.clock()
         req.state = RequestState.DONE
         self.pool.release(req.slot)
+        if req.pending_out <= 0:
+            req.out = req.out[:req.max_new_tokens]
+            req.finished_at = self.clock()
+        # else: the drain that lands the final tokens truncates at the
+        # stop point and stamps finished_at (serve/decode_loop.py).

@@ -179,6 +179,49 @@ def test_tick_evidence_counts_toward_provenance():
     assert d.provenance == ONLINE
 
 
+def test_dispatch_depth_amortises_host_overhead():
+    """serve_dispatch_depth: the paper's T_opt floor along the time
+    axis — depth = ceil(E/(1-E) * T0 / t_iter), clamped to the compiled
+    loop's bound, and 1 when dispatches are free."""
+    import math
+
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    key = DecisionKey("serve_dispatch_depth", ("cfg",))
+    d = m.dispatch_depth(key, host_overhead_s=1e-3, device_step_s=2e-3,
+                         max_depth=32)
+    assert d.chunk == math.ceil(ol.t_opt(1e-3) / 2e-3)
+    assert d.key.kind == "serve_dispatch_depth"
+    # deeper when host overhead grows; clamped at the compiled bound
+    d_deep = m.dispatch_depth(key, host_overhead_s=1e-1,
+                              device_step_s=2e-3, max_depth=32)
+    assert d_deep.chunk == 32
+    # free dispatches need no fusing; unknown device time amortises fully
+    assert m.dispatch_depth(key, host_overhead_s=0.0, device_step_s=1e-3,
+                            max_depth=32).chunk == 1
+    assert m.dispatch_depth(key, host_overhead_s=1e-3, device_step_s=0.0,
+                            max_depth=32).chunk == 32
+    assert all(e.decision.key.kind == "serve_dispatch_depth"
+               for e in m.trace.entries("serve_dispatch_depth"))
+
+
+def test_dispatch_depth_provenance_follows_evidence():
+    """The depth decision's inputs are smoothed store entries; once the
+    serve loop has observed real host/device timings the decision must
+    report online provenance."""
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    key = DecisionKey("serve_dispatch_depth", ("cfg",))
+    host_key = ("serve_host_tick", "cfg")
+    dev_key = ("serve_decode_fused", "cfg")
+    d = m.dispatch_depth(key, host_overhead_s=1e-3, device_step_s=1e-3,
+                         max_depth=16, evidence=(host_key, dev_key))
+    assert d.provenance == ANALYTIC
+    m.observe(host_key, 1, 2e-3)
+    m.observe(dev_key, 8, 8e-3)
+    d = m.dispatch_depth(key, host_overhead_s=2e-3, device_step_s=1e-3,
+                         max_depth=16, evidence=(host_key, dev_key))
+    assert d.provenance == ONLINE
+
+
 # ---------------------------------------------------------------------------
 # Measured-search policy through the engine
 # ---------------------------------------------------------------------------

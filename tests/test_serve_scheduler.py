@@ -327,6 +327,107 @@ def test_slot_pool_free_list_and_double_release(setup):
     assert pool.allocations == 1
 
 
+# ---------------------------------------------------------------------------
+# fused decode loop (serve/decode_loop.py)
+# ---------------------------------------------------------------------------
+
+def _run_wave(sched, tokens, spec):
+    """Submit (prompt_prefix_len, max_new) requests, drain, return outs."""
+    rids = [sched.submit(tokens[i][:plen], max_new_tokens=n)
+            for i, (plen, n) in enumerate(spec)]
+    outs = sched.run_until_idle()
+    return [outs[r] for r in rids]
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4, 8])
+def test_fused_decode_token_identity(setup, depth):
+    """Fused decode at any depth emits byte-identical output to the
+    legacy per-tick path — including a request completing mid-loop
+    (max_new smaller than the dispatch depth) and slot reuse after its
+    early exit (3 requests through 2 slots)."""
+    cfg, params = setup
+    tokens = make_batch(cfg, 3, 14, kind="prefill", seed=11)["tokens"]
+    spec = [(14, 9), (9, 3), (6, 7)]   # 3-token request exits mid-loop
+    ref = _run_wave(make_sched(cfg, params, n_slots=2), tokens, spec)
+    sched = ServeScheduler(
+        cfg, params, n_slots=2, max_len=48,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=depth)
+    got = _run_wave(sched, tokens, spec)
+    assert got == ref
+    # every dispatched token was drained, every budget exactly honoured
+    assert all(r.pending_out == 0 and r.finished_at is not None
+               for r in sched.requests.values())
+    assert sched.decode_dispatches < sum(n for _, n in spec)
+
+
+def test_fused_auto_depth_identity_and_trace(setup):
+    """dispatch_depth='auto': identical tokens, serve_dispatch_depth
+    decisions in the engine trace, and online provenance once the loop
+    has timed a real dispatch (warmup keeps the cold compile out)."""
+    cfg, params = setup
+    tokens = make_batch(cfg, 2, 12, kind="prefill", seed=13)["tokens"]
+    spec = [(12, 8), (7, 8)]
+    ref = _run_wave(make_sched(cfg, params, n_slots=2), tokens, spec)
+    sched = ServeScheduler(
+        cfg, params, n_slots=2, max_len=48,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth="auto")
+    sched.warmup()
+    assert _run_wave(sched, tokens, spec) == ref
+    entries = sched.decision_model().trace.entries("serve_dispatch_depth")
+    assert entries, "auto depth must be decided through the engine"
+    assert all(e.decision.chunk >= 1 for e in entries)
+    assert entries[-1].decision.provenance in ("measured", "online")
+    # host round-trips stay sub-one-per-token on the fused path
+    gen = sum(n for _, n in spec)
+    assert sched.host_roundtrips < gen
+
+
+def test_fused_donation_safety_across_waves(setup):
+    """No use-after-donate on the slot pool: the same scheduler serves
+    two waves (slot release + reacquire between fused dispatches), the
+    pool is never reallocated, and outputs match the legacy path both
+    times."""
+    cfg, params = setup
+    tokens = make_batch(cfg, 2, 10, kind="prefill", seed=17)["tokens"]
+    legacy = make_sched(cfg, params, n_slots=2)
+    sched = ServeScheduler(
+        cfg, params, n_slots=2, max_len=32,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=4)
+    sched.warmup()
+    for _ in range(2):
+        spec = [(10, 5), (6, 4)]
+        assert _run_wave(sched, tokens, spec) == \
+            _run_wave(legacy, tokens, spec)
+        sched.clear_finished()
+        legacy.clear_finished()
+    # one lm.init_caches ever, donation notwithstanding
+    assert sched.pool.allocations == 1
+    assert sched.pool.free_slots() == 2
+
+
+def test_fused_tickrecords_and_positions(setup):
+    """Dispatch accounting is host-authoritative: positions advance by
+    <= depth at dispatch time and the TickRecord carries the decided
+    depth."""
+    cfg, params = setup
+    tokens = make_batch(cfg, 1, 8, kind="prefill", seed=19)["tokens"]
+    sched = ServeScheduler(
+        cfg, params, n_slots=1, max_len=32,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=3)
+    rid = sched.submit(tokens[0], max_new_tokens=7)
+    outs = sched.run_until_idle()
+    assert len(outs[rid]) == 7
+    dec_ticks = [rec for rec in sched.trace if rec.decoded]
+    assert dec_ticks and all(rec.depth == 3 for rec in dec_ticks)
+    # 6 decode tokens (first comes from prefill) at depth 3 -> 2 dispatches
+    assert sched.decode_dispatches == 2
+    assert sched.decode_tokens == 6
+
+
 def test_scheduler_on_host_parallel_executor(setup):
     """Prefill chunks may run on pool threads; cache writes stay on the
     scheduler thread — results must match the sequential schedule."""
