@@ -1,0 +1,296 @@
+"""Trace-replay load harness: SLO-goodput is the headline number.
+
+    PYTHONPATH=src python benchmarks/load_harness.py [--smoke]
+
+Replays seeded request traces (serve/loadgen.py: Poisson, bursty MMPP,
+heavy-tailed lognormal lengths) through the asyncio ``ServeFrontend``
+with streaming, cancellation (a seeded fraction of clients abandon
+mid-stream), deadline shedding and bounded-queue backpressure enabled —
+sustained open-loop traffic, not the 8-request makespan smoke that
+``BENCH_serve.json`` reports.
+
+Two configurations per trace, identical load:
+
+* **adaptive** — ``AdaptiveCoreChunk`` + fused auto-depth decode +
+  ``admission="adaptive"`` (the ``serve_admission`` ExecutionModel
+  decision throttles burst admission from queue depth and measured
+  tick time);
+* **static**   — ``StaticCoreChunk`` on the per-tick decode path with
+  greedy fill-every-slot admission: no measurement anywhere.
+
+Reported per configuration (into ``BENCH_load.json``): **SLO-goodput**
+(tokens/s from requests that completed within their deadline — the
+number we quote), p50/p99 TTFT, p99 inter-token latency, deadline-miss
+rate, shed/cancelled/rejected counts, and the admission-decision
+provenance mix.  ``--smoke`` runs a small fixed-seed heavy-tailed trace
+and exits non-zero if adaptive SLO-goodput falls below static (the CI
+regression guard).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.acc import AdaptiveCoreChunk, StaticCoreChunk  # noqa: E402
+from repro.core.adaptive import adaptive  # noqa: E402
+from repro.core.executor import SequentialExecutor  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.serve import (GENERATORS, QueueFullError,  # noqa: E402
+                         ServeFrontend, ServeScheduler, SLOModel,
+                         materialize, percentile, trace_summary)
+
+
+def make_trace(kind: str, n: int, seed: int, slo: SLOModel):
+    """One seeded trace per (kind, n, seed): every configuration replays
+    the identical load."""
+    if kind == "poisson":
+        return GENERATORS[kind](n, rate_rps=40.0, new_tokens=10,
+                                seed=seed, slo=slo)
+    if kind == "bursty":
+        return GENERATORS[kind](n, base_rate_rps=15.0, burst_rate_rps=150.0,
+                                mean_dwell_s=(1.0, 0.3), new_tokens=10,
+                                seed=seed, slo=slo)
+    if kind == "heavy":
+        return GENERATORS[kind](n, rate_rps=40.0, seed=seed, slo=slo)
+    raise ValueError(f"unknown trace kind {kind!r}")
+
+
+def build_sched(policy: str, cfg, params, *, n_slots: int,
+                max_len: int) -> ServeScheduler:
+    if policy == "adaptive":
+        return ServeScheduler(
+            cfg, params, n_slots=n_slots, max_len=max_len,
+            executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+            dispatch_depth="auto", admission="adaptive")
+    return ServeScheduler(
+        cfg, params, n_slots=n_slots, max_len=max_len,
+        executor=adaptive(SequentialExecutor(),
+                          StaticCoreChunk(cores=1, chunks_per_core=8)),
+        admission="greedy")
+
+
+async def replay(frontend: ServeFrontend, mat_trace, *,
+                 cancel_frac: float, seed: int) -> float:
+    """Open-loop replay: every request is submitted at its trace time
+    regardless of system state; a seeded ``cancel_frac`` of clients
+    abandon their stream mid-generation.  Returns the makespan."""
+    rng = np.random.RandomState(seed + 7919)
+    cancel_at = {}
+    for i, (tr, _) in enumerate(mat_trace):
+        if rng.random_sample() < cancel_frac and tr.new_tokens >= 2:
+            cancel_at[i] = int(rng.randint(1, tr.new_tokens))
+    t0 = time.monotonic()
+
+    async def one(i, tr, prompt):
+        delay = tr.arrival_s - (time.monotonic() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        deadline = None if tr.deadline_s is None else t0 + tr.deadline_s
+        try:
+            stream = await frontend.submit(prompt, tr.new_tokens,
+                                           deadline=deadline)
+        except QueueFullError:
+            return          # backpressure: shed at the door, counted
+        k = cancel_at.get(i)
+        got = 0
+        async for _tok in stream:
+            got += 1
+            if k is not None and got >= k:
+                await stream.cancel()
+
+    await asyncio.gather(*(one(i, tr, p)
+                           for i, (tr, p) in enumerate(mat_trace)))
+    return time.monotonic() - t0
+
+
+def run_config(name: str, cfg, params, mat_trace, *, n_slots: int,
+               max_len: int, max_queue: int, cancel_frac: float,
+               seed: int) -> tuple[dict, ServeScheduler]:
+    sched = build_sched(name, cfg, params, n_slots=n_slots,
+                        max_len=max_len)
+    sched.warmup()
+    # Untimed prewarm: compile every distinct prompt-length host op so
+    # the timed replay measures serving, not the process's one-time
+    # compiles (same discipline as benchmarks/serve_throughput.py).
+    by_len = {}
+    for tr, prompt in mat_trace:
+        by_len.setdefault(int(tr.prompt_len), prompt)
+    for prompt in by_len.values():
+        sched.submit(prompt, max_new_tokens=4)
+    sched.run_until_idle()
+    sched.clear_finished()
+    sched.decode_dispatches = sched.decode_tokens = 0
+    sched.host_roundtrips = 0
+    sched.host_overhead_s = 0.0
+    sched.deadline_misses = sched.shed = sched.cancelled = 0
+    model = sched.decision_model()
+    admit_seen = len(model.trace.entries("serve_admission")) \
+        if model is not None else 0
+
+    frontend = ServeFrontend(sched, max_queue=max_queue)
+
+    async def go():
+        async with frontend:
+            return await replay(frontend, mat_trace,
+                                cancel_frac=cancel_frac, seed=seed)
+
+    makespan = asyncio.run(go())
+
+    recs = list(frontend.records.values())
+    completed = [r for r in recs if r.status == "completed"]
+    in_slo = [r for r in completed if not r.missed]
+    cancelled = sum(1 for r in recs if r.status == "cancelled")
+    shed = sum(1 for r in recs if r.status == "shed")
+    late = sum(1 for r in completed if r.missed)
+    eligible = max(len(mat_trace) - cancelled, 1)
+    ttfts = [r.first_token_at - r.submitted_at for r in recs
+             if r.first_token_at is not None]
+    itls = [b - a for r in recs
+            for a, b in zip(r.token_times, r.token_times[1:])]
+    gen = sum(r.tokens for r in recs)
+    report = {
+        "policy": name,
+        "requests": len(mat_trace),
+        "completed": len(completed),
+        "completed_in_slo": len(in_slo),
+        "generated_tokens": gen,
+        "makespan_s": round(makespan, 3),
+        # The headline: tokens that arrived in time, per second.
+        "slo_goodput_tok_s": round(
+            sum(r.tokens for r in in_slo) / makespan, 2) if makespan
+        else 0.0,
+        "tokens_per_s": round(gen / makespan, 2) if makespan else 0.0,
+        "ttft_p50_ms": round(percentile(ttfts, 50) * 1e3, 1),
+        "ttft_p99_ms": round(percentile(ttfts, 99) * 1e3, 1),
+        "itl_p99_ms": round(percentile(itls, 99) * 1e3, 1),
+        "deadline_miss_rate": round(
+            (late + shed + frontend.rejected) / eligible, 4),
+        "late_completions": late,
+        "shed": shed,
+        "cancelled": cancelled,
+        "rejected": frontend.rejected,
+        "ticks": len(sched.trace),
+        "host_overhead_ms_per_token":
+            round(sched.host_overhead_s / gen * 1e3, 3) if gen else 0.0,
+    }
+    if model is not None:
+        entries = model.trace.entries("serve_admission")[admit_seen:]
+        report["admission_decisions"] = len(entries)
+        report["admission_provenance"] = sorted(
+            {e.decision.provenance for e in entries})
+        widths = [e.decision.cores for e in entries]
+        report["mean_admission_width"] = round(
+            float(np.mean(widths)), 2) if widths else 0.0
+    print(f"  {name:9s} goodput {report['slo_goodput_tok_s']:8.1f} tok/s "
+          f"| ttft p99 {report['ttft_p99_ms']:7.1f}ms "
+          f"| itl p99 {report['itl_p99_ms']:6.1f}ms "
+          f"| miss {report['deadline_miss_rate']:.1%} "
+          f"| shed {shed} cancelled {cancelled} rejected "
+          f"{frontend.rejected}")
+    return report, sched
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fixed-seed heavy-tailed trace; exits "
+                         "non-zero if adaptive SLO-goodput < static")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per trace (default: 1000 heavy / "
+                         "256 others; 64 with --smoke)")
+    ap.add_argument("--traces", default=None,
+                    help="comma list from {heavy,poisson,bursty} "
+                         "(default: all three; heavy only with --smoke)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="single seed for arrivals, lengths, prompt "
+                         "tokens and cancellation choices")
+    ap.add_argument("--cancel-frac", type=float, default=0.05,
+                    help="fraction of clients that abandon mid-stream")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=128)
+    ap.add_argument("--slo-ttft-ms", type=float, default=750.0)
+    ap.add_argument("--slo-per-token-ms", type=float, default=60.0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write the adaptive run's ExecutionModel "
+                         "decision trace to this file")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_load.json"))
+    args = ap.parse_args()
+
+    kinds = (args.traces.split(",") if args.traces
+             else (["heavy"] if args.smoke
+                   else ["heavy", "poisson", "bursty"]))
+    slo = SLOModel(ttft_s=args.slo_ttft_ms / 1e3,
+                   per_token_s=args.slo_per_token_ms / 1e3)
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+    blob: dict = {"traces": {}, "smoke": bool(args.smoke),
+                  "seed": args.seed,
+                  "slo": {"ttft_ms": args.slo_ttft_ms,
+                          "per_token_ms": args.slo_per_token_ms}}
+    guard_ok = True
+    explain_dump = None
+    for kind in kinds:
+        n = args.requests or (64 if args.smoke
+                              else (1000 if kind == "heavy" else 256))
+        trace = make_trace(kind, n, args.seed, slo)
+        max_len = max(t.prompt_len + t.new_tokens for t in trace) + 1
+        mat = materialize(trace, cfg.vocab_size, seed=args.seed)
+        print(f"{kind}: {trace_summary(trace)}")
+        reports = {}
+        for policy in ("adaptive", "static"):
+            reports[policy], sched = run_config(
+                policy, cfg, params, mat, n_slots=args.slots,
+                max_len=max_len, max_queue=args.max_queue,
+                cancel_frac=args.cancel_frac, seed=args.seed)
+            if policy == "adaptive" and args.trace_out:
+                model = sched.decision_model()
+                if model is not None:
+                    explain_dump = model.explain()
+        ratio = (reports["adaptive"]["slo_goodput_tok_s"]
+                 / reports["static"]["slo_goodput_tok_s"]) \
+            if reports["static"]["slo_goodput_tok_s"] else float("inf")
+        blob["traces"][kind] = {
+            "trace": trace_summary(trace),
+            "adaptive": reports["adaptive"],
+            "static": reports["static"],
+            "adaptive_over_static_goodput": round(ratio, 3)
+            if ratio != float("inf") else None,
+        }
+        print(f"  adaptive/static SLO-goodput: "
+              f"{'inf' if ratio == float('inf') else f'{ratio:.2f}x'}")
+        if reports["adaptive"]["slo_goodput_tok_s"] \
+                < reports["static"]["slo_goodput_tok_s"]:
+            guard_ok = False
+
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=1)
+    print(f"-> {out}")
+    if explain_dump is not None and args.trace_out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.trace_out)),
+                    exist_ok=True)
+        with open(args.trace_out, "w") as f:
+            f.write(explain_dump + "\n")
+        print(f"-> {args.trace_out}")
+    if args.smoke and not guard_ok:
+        print("FAIL: adaptive SLO-goodput below the static baseline — "
+              "serving-front-end regression")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

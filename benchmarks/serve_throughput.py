@@ -60,7 +60,9 @@ def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
     trace = []
     for i in range(n_requests):
         t += float(rng.exponential(mean_interarrival_s))
-        plen = int(prompt_lens[i % len(prompt_lens)])
+        # Arrival gaps, prompt lengths and prompt tokens all come from
+        # the one seeded stream: a single --seed pins the whole load.
+        plen = int(prompt_lens[rng.randint(0, len(prompt_lens))])
         prompt = rng.randint(0, vocab, size=plen).astype(np.int32)
         trace.append((t, prompt, new_tokens))
     return trace
@@ -166,6 +168,10 @@ def main() -> int:
                          "adaptive path loses to the static baseline")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--new-tokens", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="single seed for the arrival and prompt-length "
+                         "RNGs (every configuration replays the same "
+                         "draw)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serve.json"))
     args = ap.parse_args()
@@ -184,7 +190,7 @@ def main() -> int:
     trace = synthetic_trace(
         n_requests, mean_interarrival_s=0.002,
         prompt_lens=prompt_lens, new_tokens=new_tokens,
-        vocab=cfg.vocab_size, seed=0)
+        vocab=cfg.vocab_size, seed=args.seed)
 
     print(f"serve throughput: {n_requests} requests, slots={n_slots}, "
           f"prompts {prompt_lens}, +{new_tokens} tokens each")

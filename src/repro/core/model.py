@@ -521,6 +521,67 @@ class ExecutionModel:
                     ("max_depth", max_depth), ("eff", eff))
             + tuple(inputs)))
 
+    def admission_width(self, key: DecisionKey | Hashable, *,
+                        queue_depth: int, free_slots: int,
+                        host_tick_s: float, request_cost_s: float,
+                        max_width: int, slack_s: float | None = None,
+                        eff: float = overhead_law.DEFAULT_EFFICIENCY,
+                        evidence: Sequence[Hashable] = (),
+                        inputs: tuple = ()) -> Decision:
+        """Admission width for a serving tick (decision kind
+        ``serve_admission``): how many queued requests to admit into free
+        cache slots *this* tick.
+
+        This is Eq. 7's "leave units free" applied at the request level:
+        slots are the processing units, the waiting queue is the
+        workload, ``host_tick_s`` is the fixed cost every admission round
+        pays (the measured ``serve_host_tick`` T0), and
+        ``request_cost_s`` is one admitted request's prefill bill (the
+        online-refined ``serve_prefill`` t_iter times its prompt).  The
+        Overhead-Law prior yields the widest admission that keeps the
+        tick efficient — admitting an entire burst at once parks
+        requests in slots where their prefills stall the decode lanes
+        and, under EDF, locks the pool against later, more urgent
+        arrivals.
+
+        ``slack_s`` is the head-of-queue deadline slack: when waiting
+        another throttled tick would plausibly cost the deadline
+        (slack inside two admission rounds), the width opens up to every
+        free slot — deadline pressure beats efficiency.  Clamped to
+        ``[1, min(free_slots, queue_depth, max_width)]`` (a tick with
+        queued work and a free slot always admits at least one request:
+        throttling must never become starvation).
+
+        Both timing inputs are expected to come from the calibration
+        store; ``evidence`` names their keys so provenance upgrades to
+        online once the serve loop has timed real ticks and prefills.
+        """
+        dkey = DecisionKey.wrap(key)
+        prior: AnalyticOverheadLaw = self.policies["prior"]
+        cap = max(min(int(free_slots), int(queue_depth), int(max_width)), 1)
+        d = prior.decide(t_iter=max(request_cost_s, 0.0),
+                         count=max(int(queue_depth), 1),
+                         t0=max(host_tick_s, 0.0), max_cores=cap, eff=eff,
+                         chunks_per_core=1)
+        width = min(max(d.n_cores, 1), cap)
+        urgent = slack_s is not None and \
+            slack_s <= 2.0 * (host_tick_s + request_cost_s)
+        if urgent:
+            width = cap
+        provenance = self.provenance_of(dkey)
+        for ekey in evidence:
+            provenance = provenance_max(provenance,
+                                        self.provenance_of(ekey))
+        return self._finish(Decision(
+            key=dkey, policy=prior.name, provenance=provenance,
+            cores=width, batch_width=width, acc=d,
+            inputs=(("queue_depth", queue_depth),
+                    ("free_slots", free_slots),
+                    ("host_tick_s", host_tick_s),
+                    ("request_cost_s", request_cost_s),
+                    ("slack_s", slack_s), ("urgent", urgent))
+            + tuple(inputs)))
+
     def default_cores_chunk(self, count: int, max_cores: int) -> AccDecision:
         """The customization-point *default* decision (paper: "splits the
         work into equally sized chunks while utilizing all available

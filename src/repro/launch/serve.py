@@ -8,10 +8,18 @@ Requests (synthetic prompts of jittered lengths) go through the
 chunking/batching per tick, slot-batched decode.  Reports throughput and
 per-request latency percentiles.  T0/t_iter calibrations persist across
 runs under ``--cal-cache-dir`` unless ``--no-cal-cache``.
+
+``--frontend`` switches to the asyncio ``ServeFrontend`` path: a seeded
+open-loop arrival trace (serve/loadgen.py) replayed with per-request
+token streaming, deadline shedding and adaptive admission — the report
+leads with SLO-goodput and the deadline-miss rate instead of raw
+throughput.  ``--print-launch-profile`` emits the recommended process
+environment (shell-sourceable) for production runs.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -23,7 +31,34 @@ from ..core.calibration import CalibrationCache
 from ..core.executor import SequentialExecutor
 from ..data import make_batch
 from ..models import lm
-from ..serve import ServeEngine, ServeScheduler, percentile
+from ..serve import (ServeEngine, ServeFrontend, ServeScheduler, SLOModel,
+                     heavy_tailed_trace, materialize, percentile)
+
+# Recommended process environment for serving runs — (var, value, why).
+# Source it with:  eval "$(python -m repro.launch.serve --print-launch-profile)"
+# The malloc and logging lines follow the launch scripts of production
+# JAX training rigs (SNIPPETS §1-2); the compilation-cache lines keep
+# warm-start latency flat across process restarts, which matters for a
+# serving tier that redeploys often.
+LAUNCH_PROFILE = (
+    ("LD_PRELOAD", "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+     "tcmalloc: faster malloc under slot-pool churn (skip if absent)"),
+    ("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD", "60000000000",
+     "silence large-alloc warnings for cache-pool buffers"),
+    ("TF_CPP_MIN_LOG_LEVEL", "4",
+     "quiet XLA/TSL startup chatter on the serving console"),
+    ("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=true",
+     "threaded CPU backend for host-fallback ops"),
+    ("JAX_COMPILATION_CACHE_DIR", "~/.cache/repro-jax-cache",
+     "persist compiled executables across restarts"),
+    ("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "1",
+     "cache anything that took >=1s to compile"),
+)
+
+
+def print_launch_profile() -> None:
+    for var, value, why in LAUNCH_PROFILE:
+        print(f"export {var}={value}  # {why}")
 
 
 def serve_cross_attention(cfg, params, args, executor, tuner=None) -> None:
@@ -45,9 +80,58 @@ def serve_cross_attention(cfg, params, args, executor, tuner=None) -> None:
     print("sample:", out[0].tolist())
 
 
+def serve_frontend(sched: ServeScheduler, args) -> None:
+    """Async front-end replay: a seeded heavy-tailed open-loop trace
+    with streaming consumers and per-request SLO deadlines — the mode
+    whose headline is goodput, not throughput."""
+    slo = SLOModel()
+    trace = heavy_tailed_trace(
+        args.requests, rate_rps=args.rate_rps,
+        max_prompt=max(args.prompt_len, 8), max_new=args.new_tokens,
+        seed=args.seed, slo=slo)
+    mat = materialize(trace, sched.cfg.vocab_size, seed=args.seed)
+    frontend = ServeFrontend(sched, max_queue=args.max_queue)
+
+    async def replay():
+        async with frontend:
+            t0 = time.monotonic()
+
+            async def one(tr, prompt):
+                delay = tr.arrival_s - (time.monotonic() - t0)
+                if delay > 0:
+                    await asyncio.sleep(delay)
+                deadline = None if tr.deadline_s is None \
+                    else t0 + tr.deadline_s
+                stream = await frontend.submit(prompt, tr.new_tokens,
+                                               deadline=deadline, wait=True)
+                async for _tok in stream:
+                    pass
+
+            await asyncio.gather(*(one(tr, p) for tr, p in mat))
+            return time.monotonic() - t0
+
+    makespan = asyncio.run(replay())
+    stats = frontend.stats()
+    recs = list(frontend.records.values())
+    ttfts = [r.first_token_at - r.submitted_at for r in recs
+             if r.first_token_at is not None]
+    goodput = stats["goodput_tokens"] / makespan if makespan else 0.0
+    eligible = max(stats["submitted"] - stats["cancelled"], 1)
+    print(f"arch={sched.cfg.name} frontend requests={args.requests} "
+          f"slots={args.slots} admission={sched.admission} "
+          f"ticks={len(sched.trace)}")
+    print(f"SLO-goodput {goodput:.1f} tok/s over {makespan:.2f}s | "
+          f"completed {stats['completed']} "
+          f"(in-SLO {stats['completed_in_slo']}) shed {stats['shed']} "
+          f"rejected {stats['rejected']} | "
+          f"miss rate {stats['missed'] / eligible:.1%} | "
+          f"ttft p50={percentile(ttfts, 50) * 1e3:.0f}ms "
+          f"p99={percentile(ttfts, 99) * 1e3:.0f}ms")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=list(ARCH_NAMES), required=True)
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), required=False)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -69,9 +153,33 @@ def main() -> None:
                          "token)")
     ap.add_argument("--explain-decisions", action="store_true",
                     help="dump the ExecutionModel decision trace: every "
-                         "serve-tick and kernel-block choice with the "
-                         "policy and inputs that produced it")
+                         "serve-tick, admission and kernel-block choice "
+                         "with the policy and inputs that produced it")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve through the asyncio ServeFrontend: "
+                         "seeded open-loop trace, streaming consumers, "
+                         "SLO deadlines; reports SLO-goodput")
+    ap.add_argument("--admission", choices=("greedy", "adaptive"),
+                    default=None,
+                    help="admission width policy (default: adaptive "
+                         "with --frontend, greedy otherwise)")
+    ap.add_argument("--rate-rps", type=float, default=40.0,
+                    help="--frontend arrival rate (requests/s)")
+    ap.add_argument("--max-queue", type=int, default=128,
+                    help="--frontend bounded admission queue")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="--frontend trace seed (arrivals, lengths, "
+                         "prompt tokens)")
+    ap.add_argument("--print-launch-profile", action="store_true",
+                    help="print the recommended serving environment "
+                         "(shell-sourceable) and exit")
     args = ap.parse_args()
+
+    if args.print_launch_profile:
+        print_launch_profile()
+        return
+    if args.arch is None:
+        ap.error("--arch is required (unless --print-launch-profile)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -101,10 +209,24 @@ def main() -> None:
     depth = args.dispatch_depth.strip().lower()
     depth = None if depth in ("off", "none", "0") else \
         depth if depth == "auto" else int(depth)
+    admission = args.admission or \
+        ("adaptive" if args.frontend else "greedy")
     sched = ServeScheduler(cfg, params, n_slots=args.slots, max_len=max_len,
                            executor=executor, kernel_tuner=tuner,
-                           dispatch_depth=depth)
+                           dispatch_depth=depth, admission=admission)
     sched.warmup()
+
+    if args.frontend:
+        serve_frontend(sched, args)
+        if args.explain_decisions:
+            model = sched.decision_model()
+            if model is not None:
+                print(model.explain())
+        if not args.no_cal_cache:
+            cache.save()
+            print(f"calibration cache: {cache.path} "
+                  f"({len(cache)} entries)")
+        return
 
     # Jittered prompt lengths: requests join and leave the batch at
     # different ticks — the continuous-batching case, not lock-step.

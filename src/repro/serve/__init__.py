@@ -2,8 +2,14 @@ from .decode_loop import (DEFAULT_MAX_DEPTH, make_fused_decode_step,
                           make_lane_step, masked_merge)
 from .engine import (ServeEngine, make_decode_step, make_prefill_step,
                      prefill_segments)
+from .frontend import (QueueFullError, RequestRecord, ServeFrontend,
+                       TokenStream)
 from .kv_cache import SlotKVCachePool
-from .scheduler import (Request, RequestState, ServeScheduler, TickRecord,
+from .loadgen import (GENERATORS, SLOModel, TraceRequest, bursty_trace,
+                      heavy_tailed_trace, materialize, poisson_trace,
+                      trace_summary)
+from .scheduler import (TERMINAL_STATES, PromptTooLongError, Request,
+                        RequestState, ServeScheduler, TickRecord,
                         percentile)
 
 __all__ = [
@@ -11,7 +17,10 @@ __all__ = [
     "prefill_segments",
     "SlotKVCachePool",
     "ServeScheduler", "Request", "RequestState", "TickRecord",
-    "percentile",
+    "percentile", "PromptTooLongError", "TERMINAL_STATES",
+    "ServeFrontend", "TokenStream", "RequestRecord", "QueueFullError",
+    "SLOModel", "TraceRequest", "GENERATORS", "poisson_trace",
+    "bursty_trace", "heavy_tailed_trace", "materialize", "trace_summary",
     "DEFAULT_MAX_DEPTH", "make_fused_decode_step", "make_lane_step",
     "masked_merge",
 ]

@@ -1,0 +1,160 @@
+"""Seeded request-trace generators for the load harness.
+
+Three arrival processes, one fixed-seed contract: the same
+``(generator, n, seed)`` always yields the identical trace, so every
+scheduler configuration in ``benchmarks/load_harness.py`` replays the
+exact same load and the comparison is apples-to-apples.
+
+* ``poisson_trace``      — memoryless arrivals at a constant rate: the
+  baseline open-loop assumption every queueing result starts from.
+* ``bursty_trace``       — a two-state Markov-modulated Poisson process
+  (calm rate / burst rate, exponential dwell in each state): the
+  traffic shape that punishes greedy admission, because a burst that is
+  admitted wholesale parks a wall of prefills in the slot pool.
+* ``heavy_tailed_trace`` — lognormal prompt *and* output lengths: a few
+  requests are orders of magnitude longer than the median, the regime
+  real LM serving lives in (and the acceptance trace for this repo's
+  front end).
+
+Every request carries an SLO deadline derived from an ``SLOModel``
+(TTFT allowance plus a per-token inter-token budget — longer answers
+legitimately get more time), which is what turns a replay into a
+goodput measurement instead of a throughput one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOModel:
+    """Deadline = arrival + ttft_s + per_token_s * new_tokens."""
+
+    ttft_s: float = 0.75
+    per_token_s: float = 0.06
+
+    def deadline_offset(self, new_tokens: int) -> float:
+        return self.ttft_s + self.per_token_s * max(int(new_tokens), 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One request in a trace: arrival offset (seconds from trace
+    start), prompt/output lengths, and the absolute-offset deadline
+    (None: no SLO on this request)."""
+
+    arrival_s: float
+    prompt_len: int
+    new_tokens: int
+    deadline_s: float | None
+
+
+def _finalize(arrivals, plens, news, slo: SLOModel | None
+              ) -> list[TraceRequest]:
+    out = []
+    for t, p, n in zip(arrivals, plens, news):
+        p, n = int(max(p, 1)), int(max(n, 1))
+        d = None if slo is None else float(t) + slo.deadline_offset(n)
+        out.append(TraceRequest(float(t), p, n, d))
+    return out
+
+
+def poisson_trace(n: int, *, rate_rps: float,
+                  prompt_lens: tuple[int, ...] = (8, 16, 32),
+                  new_tokens: int = 12, seed: int = 0,
+                  slo: SLOModel | None = SLOModel()) -> list[TraceRequest]:
+    """Constant-rate Poisson arrivals, prompt lengths drawn uniformly
+    from ``prompt_lens``."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    plens = rng.choice(np.asarray(prompt_lens), size=n)
+    news = np.full(n, new_tokens)
+    return _finalize(arrivals, plens, news, slo)
+
+
+def bursty_trace(n: int, *, base_rate_rps: float, burst_rate_rps: float,
+                 mean_dwell_s: tuple[float, float] = (1.0, 0.25),
+                 prompt_lens: tuple[int, ...] = (8, 16, 32),
+                 new_tokens: int = 12, seed: int = 0,
+                 slo: SLOModel | None = SLOModel()) -> list[TraceRequest]:
+    """Two-state MMPP: exponential dwell in a calm state
+    (``base_rate_rps``) and a burst state (``burst_rate_rps``), Poisson
+    arrivals at the current state's rate."""
+    rng = np.random.RandomState(seed)
+    rates = (float(base_rate_rps), float(burst_rate_rps))
+    t, state = 0.0, 0
+    next_switch = rng.exponential(mean_dwell_s[0])
+    arrivals = []
+    while len(arrivals) < n:
+        dt = rng.exponential(1.0 / rates[state])
+        if t + dt >= next_switch:
+            # State flips before the next arrival lands: restart the
+            # draw from the switch point at the new rate (memoryless).
+            t = next_switch
+            state = 1 - state
+            next_switch = t + rng.exponential(mean_dwell_s[state])
+            continue
+        t += dt
+        arrivals.append(t)
+    plens = rng.choice(np.asarray(prompt_lens), size=n)
+    news = np.full(n, new_tokens)
+    return _finalize(arrivals, plens, news, slo)
+
+
+def heavy_tailed_trace(n: int, *, rate_rps: float,
+                       median_prompt: int = 12, prompt_sigma: float = 0.7,
+                       median_new: int = 8, new_sigma: float = 0.6,
+                       max_prompt: int = 96, max_new: int = 48,
+                       seed: int = 0,
+                       slo: SLOModel | None = SLOModel()
+                       ) -> list[TraceRequest]:
+    """Poisson arrivals with lognormal prompt and output lengths
+    (median-parameterised, clipped to the slot geometry): the
+    heavy-tailed length mix where a handful of long requests dominate
+    the token budget."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    plens = np.clip(np.rint(rng.lognormal(
+        math.log(median_prompt), prompt_sigma, size=n)), 1, max_prompt)
+    news = np.clip(np.rint(rng.lognormal(
+        math.log(median_new), new_sigma, size=n)), 1, max_new)
+    return _finalize(arrivals, plens, news, slo)
+
+
+GENERATORS = {
+    "poisson": poisson_trace,
+    "bursty": bursty_trace,
+    "heavy": heavy_tailed_trace,
+}
+
+
+def materialize(trace: list[TraceRequest], vocab: int, seed: int = 0
+                ) -> list[tuple[TraceRequest, np.ndarray]]:
+    """Attach a seeded int32 prompt token array to every trace request
+    (kept separate from generation so traces stay cheap to describe and
+    compare)."""
+    rng = np.random.RandomState(seed ^ 0x5EED)
+    return [(tr, rng.randint(0, vocab, size=tr.prompt_len)
+             .astype(np.int32)) for tr in trace]
+
+
+def trace_summary(trace: list[TraceRequest]) -> dict:
+    """Shape-of-the-load numbers for reports (duration, rates, length
+    percentiles) — what BENCH_load.json records alongside the results."""
+    arr = np.asarray([t.arrival_s for t in trace])
+    plens = np.asarray([t.prompt_len for t in trace])
+    news = np.asarray([t.new_tokens for t in trace])
+    dur = float(arr[-1]) if len(arr) else 0.0
+    return {
+        "requests": len(trace),
+        "duration_s": round(dur, 3),
+        "mean_rate_rps": round(len(trace) / dur, 2) if dur else 0.0,
+        "prompt_p50": int(np.percentile(plens, 50)),
+        "prompt_p99": int(np.percentile(plens, 99)),
+        "new_tokens_p50": int(np.percentile(news, 50)),
+        "new_tokens_p99": int(np.percentile(news, 99)),
+        "total_tokens": int(plens.sum() + news.sum()),
+    }

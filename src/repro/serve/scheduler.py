@@ -72,6 +72,20 @@ from .kv_cache import SlotKVCachePool
 DEFAULT_CHUNK_BUCKETS = (8, 16, 32, 64, 128, 256)
 
 
+class PromptTooLongError(ValueError):
+    """A submitted prompt does not fit a cache slot.  Typed (the front
+    end turns it into a structured per-request rejection instead of a
+    serve-loop crash); subclasses ``ValueError`` so pre-existing callers
+    that caught the bare error keep working."""
+
+    def __init__(self, prompt_len: int, max_len: int):
+        self.prompt_len = prompt_len
+        self.max_len = max_len
+        super().__init__(
+            f"prompt of {prompt_len} tokens does not fit a "
+            f"max_len={max_len} slot")
+
+
 def percentile(xs, p: float) -> float:
     """Latency-report percentile; NaN on empty (shared by the launch CLI
     and the throughput benchmark so their numbers can't diverge)."""
@@ -86,6 +100,13 @@ class RequestState(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     DONE = "done"
+    CANCELLED = "cancelled"    # caller withdrew the request mid-flight
+    SHED = "shed"              # deadline expired before prefill: dropped
+
+
+# States a request never leaves (its slot, if any, is back in the pool).
+TERMINAL_STATES = (RequestState.DONE, RequestState.CANCELLED,
+                   RequestState.SHED)
 
 
 @dataclasses.dataclass
@@ -130,6 +151,11 @@ class TickRecord:
     n_cores: int
     chunk: int
     depth: int = 0       # fused dispatch depth (0: per-tick decode path)
+    # SLO accounting (the deterministic trace tests assert these):
+    # deadline misses charged to this tick (sheds + late finishes) and
+    # the waiting-queue depth left after this tick's admission.
+    deadline_misses: int = 0
+    queue_depth: int = 0
 
 
 class ServeScheduler:
@@ -143,7 +169,9 @@ class ServeScheduler:
                  kernel_tuner=None,
                  dispatch_depth: int | str | None = None,
                  max_dispatch_depth: int = DEFAULT_MAX_DEPTH,
-                 pipeline: int = 2, sync_every: int = 8):
+                 pipeline: int = 2, sync_every: int = 8,
+                 admission: str = "greedy",
+                 shed_expired: bool = False):
         kinds = set(cfg.layer_kinds())
         if "cross_attn" in kinds:
             raise ValueError(
@@ -204,6 +232,28 @@ class ServeScheduler:
         self.pipeline = max(int(pipeline), 1)
         self.sync_every = max(int(sync_every), 1)
         self.depth_key = DecisionKey("serve_dispatch_depth", sig)
+        # Admission policy: "greedy" fills every free slot (the pre-SLO
+        # behaviour, what the deterministic trace tests pin); "adaptive"
+        # makes the width a ``serve_admission`` engine decision from the
+        # queue depth and the measured tick time (the front end's mode).
+        if admission not in ("greedy", "adaptive"):
+            raise ValueError(
+                f"admission must be 'greedy' or 'adaptive', "
+                f"got {admission!r}")
+        self.admission = admission
+        self.admit_key = DecisionKey("serve_admission", sig)
+        # Deadline enforcement: with ``shed_expired`` a WAITING request
+        # whose deadline has already passed is shed *before* prefill
+        # (its tokens would be thrown away anyway); finished requests
+        # that land past their deadline are counted as misses either
+        # way.  Cumulative SLO counters (per-tick values ride on the
+        # TickRecord):
+        self.shed_expired = bool(shed_expired)
+        self.deadline_misses = 0    # sheds + late finishes
+        self.shed = 0               # expired before prefill, dropped
+        self.cancelled = 0          # withdrawn by the caller mid-flight
+        self._tick_misses = 0       # misses charged to the current tick
+        self._queue_depth = 0       # waiting after this tick's admission
         # Timing keys for the depth decision's two inputs (both refined
         # online): seconds of host work per tick, seconds of device
         # work per fused-decoded token.
@@ -249,9 +299,7 @@ class ServeScheduler:
         if tokens.shape[0] == 0:
             raise ValueError("empty prompt")
         if tokens.shape[0] >= self.max_len:
-            raise ValueError(
-                f"prompt of {tokens.shape[0]} tokens does not fit a "
-                f"max_len={self.max_len} slot")
+            raise PromptTooLongError(int(tokens.shape[0]), self.max_len)
         rid = next(self._rid)
         req = Request(rid=rid, tokens=tokens,
                       max_new_tokens=max(int(max_new_tokens), 1),
@@ -265,6 +313,33 @@ class ServeScheduler:
     def pending(self) -> int:
         """Requests not yet finished (waiting + running)."""
         return len(self._waiting) + len(self._active)
+
+    def cancel(self, rid: int) -> bool:
+        """Withdraw a request mid-flight.  Its cache slot goes straight
+        back to the free list (no reallocation — the pool's
+        ``allocations==1`` donation invariant holds), and any tokens it
+        has in a not-yet-drained fused dispatch are dropped at drain
+        time instead of emitted.  Returns False when the request is
+        unknown or already terminal (cancel is idempotent)."""
+        req = self.requests.get(rid)
+        if req is None or req.state in TERMINAL_STATES:
+            return False
+        if req.state is RequestState.WAITING:
+            self._waiting.remove(req)
+        else:
+            self._active.remove(req)
+            if req.slot is not None:
+                # A first token the prefill already produced for this
+                # slot must not be spliced into the next dispatch's
+                # token carry — the slot may belong to someone else by
+                # then.
+                self._tok_overrides.pop(req.slot, None)
+                self.pool.release(req.slot)
+                req.slot = None
+        req.state = RequestState.CANCELLED
+        req.finished_at = self.clock()
+        self.cancelled += 1
+        return True
 
     def decision_model(self) -> ExecutionModel | None:
         """The ExecutionModel engine behind this scheduler's decisions
@@ -285,7 +360,7 @@ class ServeScheduler:
         reachable."""
         self.flush()   # a DONE request's tokens may still be in flight
         self.requests = {rid: r for rid, r in self.requests.items()
-                         if r.state is not RequestState.DONE}
+                         if r.state not in TERMINAL_STATES}
         self.trace.clear()
 
     def run_until_idle(self, max_ticks: int = 100_000) -> dict[int, list[int]]:
@@ -349,6 +424,7 @@ class ServeScheduler:
         """
         t_start = time.perf_counter()
         self._blocked_s = 0.0
+        self._tick_misses = 0
         was_warm = self._warm_fused
         rec = self._tick_fused() if self._fused else self._tick_legacy()
         host_s = max(time.perf_counter() - t_start - self._blocked_s, 0.0)
@@ -374,7 +450,9 @@ class ServeScheduler:
             tick=self._tick, admitted=tuple(admitted),
             prefill_ops=tuple(prefill_ops), decoded=tuple(decoded),
             finished=tuple(finished), queued_tokens=queued,
-            n_cores=cores, chunk=chunk)
+            n_cores=cores, chunk=chunk,
+            deadline_misses=self._tick_misses,
+            queue_depth=self._queue_depth)
         self.trace.append(rec)
         self._tick += 1
         return rec
@@ -412,7 +490,9 @@ class ServeScheduler:
             tick=self._tick, admitted=tuple(admitted),
             prefill_ops=tuple(prefill_ops), decoded=tuple(decoded),
             finished=tuple(finished), queued_tokens=queued,
-            n_cores=cores, chunk=chunk, depth=depth)
+            n_cores=cores, chunk=chunk, depth=depth,
+            deadline_misses=self._tick_misses,
+            queue_depth=self._queue_depth)
         self.trace.append(rec)
         self._tick += 1
         return rec
@@ -420,18 +500,86 @@ class ServeScheduler:
     def _admit(self) -> list[int]:
         """Earliest-deadline-first admission into free slots; FIFO among
         requests without deadlines.  Exhausted pool ⇒ requests keep
-        waiting (they are *queued*, never dropped)."""
+        waiting (they are *queued*, never dropped — unless
+        ``shed_expired`` and their deadline has already passed, in which
+        case prefilling them would burn compute on tokens nobody can
+        use: they are shed before prefill and counted as misses).  With
+        ``admission="adaptive"`` the number of slots filled this tick is
+        a ``serve_admission`` engine decision, not "all of them"."""
+        if self.shed_expired and self._waiting:
+            now = self.clock()
+            kept = []
+            for req in self._waiting:
+                if req.deadline is not None and now > req.deadline:
+                    req.state = RequestState.SHED
+                    req.finished_at = now
+                    self.shed += 1
+                    self.deadline_misses += 1
+                    self._tick_misses += 1
+                else:
+                    kept.append(req)
+            self._waiting = kept
         self._waiting.sort(key=lambda r: (
             r.deadline if r.deadline is not None else float("inf"),
             r.arrival, r.rid))
+        width = self._decide_admission()
         admitted = []
-        while self._waiting and self.pool.free_slots():
+        while self._waiting and self.pool.free_slots() \
+                and (width is None or len(admitted) < width):
             req = self._waiting.pop(0)
             req.slot = self.pool.acquire(req.rid)
             req.state = RequestState.PREFILL
             self._active.append(req)
             admitted.append(req.rid)
+        self._queue_depth = len(self._waiting)
         return admitted
+
+    def _decide_admission(self) -> int | None:
+        """Admission width for this tick (decision kind
+        ``serve_admission``), or None for greedy fill-every-slot.
+
+        The analytic prior reads the Overhead Law at the request level:
+        the measured host tick time is the T0 every admission round
+        pays, one queued request's prefill bill (online-refined
+        ``serve_prefill`` t_iter × its remaining prompt) is the t_iter,
+        and the queue depth is the element count — the width is the
+        widest admission that keeps the tick efficient, opened up to
+        every free slot when the head-of-queue deadline slack is inside
+        two admission rounds (deadline pressure beats efficiency).
+        """
+        if self.admission != "adaptive" or not self._waiting:
+            return None
+        free = self.pool.free_slots()
+        if free == 0:
+            return None
+        model = self.decision_model()
+        if model is None:       # static params object: no store, greedy
+            return None
+        host = model.smoothed_t_iter(self.host_tick_key)
+        inputs: tuple = ()
+        if host is None:
+            # Same seed as the depth decision: the calibrated
+            # empty-dispatch T0 plus a few engine queries — the host
+            # work a tick provably pays before any tick was timed.
+            host = self.acc.calibrate_t0(self.executor) \
+                + 4.0 * decision_overhead_s()
+            inputs = (("seeded", True),)
+        head = self._waiting[0]
+        t_pf = self.acc.measure_iteration(
+            self.executor, self.prefill_profile,
+            max(head.remaining_prefill, 1), key=self.prefill_key)
+        req_cost = t_pf * max(head.remaining_prefill, 1)
+        slack = None if head.deadline is None \
+            else head.deadline - self.clock()
+        decision = model.admission_width(
+            self.admit_key, queue_depth=len(self._waiting),
+            free_slots=free, host_tick_s=host, request_cost_s=req_cost,
+            slack_s=slack, max_width=self.pool.n_slots,
+            eff=getattr(self.acc, "efficiency",
+                        overhead_law.DEFAULT_EFFICIENCY),
+            evidence=(self.host_tick_key, self.prefill_key),
+            inputs=inputs)
+        return decision.cores
 
     def _decide(self) -> tuple[int, int, int]:
         """(queued tokens, batch width, prefill chunk) for this tick.
@@ -787,13 +935,18 @@ class ServeScheduler:
                 self._blocked_s += time.perf_counter() - t_dev
             self.host_roundtrips += 1
             for req, slot, take in lanes:
-                req.out.extend(int(toks[j, slot]) for j in range(take))
                 req.pending_out -= take
+                if req.state is RequestState.CANCELLED:
+                    # Dispatched before the cancel landed: the buffer is
+                    # drained (the slot bookkeeping must balance) but
+                    # the tokens are dropped, never emitted.
+                    continue
+                req.out.extend(int(toks[j, slot]) for j in range(take))
                 if req.state is RequestState.DONE \
                         and req.pending_out <= 0 \
                         and req.finished_at is None:
                     req.out = req.out[:req.max_new_tokens]
-                    req.finished_at = self.clock()
+                    self._stamp_finished(req)
 
     def flush(self) -> None:
         """Block until every in-flight fused dispatch has drained."""
@@ -804,6 +957,15 @@ class ServeScheduler:
         self.pool.release(req.slot)
         if req.pending_out <= 0:
             req.out = req.out[:req.max_new_tokens]
-            req.finished_at = self.clock()
+            self._stamp_finished(req)
         # else: the drain that lands the final tokens truncates at the
         # stop point and stamps finished_at (serve/decode_loop.py).
+
+    def _stamp_finished(self, req: Request) -> None:
+        """Stamp completion time and charge a deadline miss if the
+        request's tokens landed past its deadline (SLO accounting: a
+        late completion is wasted work, same as a shed)."""
+        req.finished_at = self.clock()
+        if req.deadline is not None and req.finished_at > req.deadline:
+            self.deadline_misses += 1
+            self._tick_misses += 1
