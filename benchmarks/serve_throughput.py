@@ -21,12 +21,24 @@ configurations over the same slot pool geometry:
 Open-loop means arrivals do not wait for the system: a request is
 submitted as soon as the wall clock passes its timestamp, so a slow
 policy builds queue depth and pays for it in p95 latency.  Emits
-``BENCH_serve.json`` with tokens/sec, latency percentiles, and the
+``BENCH_serve.json`` with tokens/sec, latency percentiles, the
 dispatch-granularity accounting (host-overhead-per-token,
-dispatches-per-token, host-round-trips-per-token) per configuration.
+dispatches-per-token, host-round-trips-per-token), and achieved
+per-device rates (TFLOP/s, HBM GB/s and roofline bandwidth utilization,
+from the decode step's XLA cost analysis x the scheduler's
+decode-loop-iteration counter) per configuration.
+
+``--mesh DATA,MODEL`` additionally replays the trace against the fused
+adaptive configuration sharded over a device mesh (tensor-parallel
+within a replica, ``DATA`` data-parallel slot groups) with
+``n_replicas x slots`` lanes and per-device batch width decided by
+``serve_mesh_batch`` — the ``mesh`` section of the report.
 
 ``--smoke`` doubles as the CI regression guard: it exits non-zero if
-the fused adaptive configuration fails to beat the static baseline.
+the fused adaptive configuration fails to beat the static baseline,
+and (with ``--mesh``) if the sharded run collapses below
+``MESH_SMOKE_FLOOR`` of the single-device fused run or its
+``serve_mesh_batch`` decisions never reach online provenance.
 """
 from __future__ import annotations
 
@@ -46,8 +58,21 @@ from repro.configs import get_config  # noqa: E402
 from repro.core.acc import AdaptiveCoreChunk, StaticCoreChunk  # noqa: E402
 from repro.core.adaptive import adaptive  # noqa: E402
 from repro.core.executor import SequentialExecutor  # noqa: E402
+from repro.core.hardware import TPU_V5E  # noqa: E402
 from repro.models import lm  # noqa: E402
 from repro.serve import ServeScheduler, percentile  # noqa: E402
+
+# Mesh smoke guard floor: host-emulated devices
+# (--xla_force_host_platform_device_count) time-share ONE cpu, so the
+# sharded run cannot beat the single-device run in wall clock — global
+# mesh throughput lands well under 1x and per-device throughput under
+# 1/n_devices.  What the guard can catch on such hosts is a sharding
+# regression that tanks the path (bad layouts forcing per-step
+# resharding, a lost donation recompiling every dispatch): those show up
+# as order-of-magnitude collapses, not percents.  On real accelerator
+# meshes the per-device column in ``device_metrics`` is the scaling
+# metric; here we assert the global ratio stays above this floor.
+MESH_SMOKE_FLOOR = 0.05
 
 
 def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
@@ -69,10 +94,10 @@ def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
 
 
 def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
-               max_len: int, dispatch_depth=None) -> dict:
+               max_len: int, dispatch_depth=None, mesh=None):
     sched = ServeScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
                            executor=adaptive(SequentialExecutor(), policy),
-                           dispatch_depth=dispatch_depth)
+                           dispatch_depth=dispatch_depth, mesh=mesh)
     sched.warmup()
     # Untimed steady-state warm: one request per distinct prompt length
     # compiles every shape-dependent host op (token slice / pad per
@@ -89,10 +114,13 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
     sched.decode_dispatches = sched.decode_tokens = 0
     sched.host_roundtrips = 0
     sched.host_overhead_s = 0.0
+    sched.decode_loop_iters = 0
     # Snapshot the engine trace so the report covers only the timed
     # replay's depth decisions, not the warm phase's seeded ones.
     model = sched.decision_model()
     depth_seen = len(model.trace.entries("serve_dispatch_depth")) \
+        if model is not None else 0
+    mesh_seen = len(model.trace.entries("serve_mesh_batch")) \
         if model is not None else 0
 
     t0 = time.monotonic()
@@ -152,13 +180,51 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
         report["depth_decisions"] = len(entries)
         report["depth_provenance"] = sorted(
             {e.decision.provenance for e in entries})
+    if mesh is not None and model is not None:
+        entries = model.trace.entries("serve_mesh_batch")[mesh_seen:]
+        report["mesh_decisions"] = len(entries)
+        report["mesh_provenance"] = sorted(
+            {e.decision.provenance for e in entries})
+        report["mesh_trace"] = [e.decision.explain() for e in entries[-6:]]
+    # Achieved per-device rates from the decode step's XLA cost analysis
+    # (analysis/roofline.py).  cost_analysis counts a fori_loop body
+    # ONCE, so the figures are per loop iteration per device — the
+    # scheduler's decode_loop_iters counter is the multiplier.  The
+    # bandwidth-utilization column anchors to the TPU v5e roofline spec
+    # so runs on different hosts stay comparable.
+    costs = sched.decode_cost_analysis()
+    iters = sched.decode_loop_iters
+    if costs is not None and makespan > 0:
+        hbm_bps = costs["hbm_bytes_per_device"] * iters / makespan
+        report["device_metrics"] = {
+            "n_devices": costs["n_devices"],
+            "decode_loop_iters": iters,
+            "decode_flops_per_device_per_iter": costs["flops_per_device"],
+            "decode_hbm_bytes_per_device_per_iter":
+                costs["hbm_bytes_per_device"],
+            "collective_wire_bytes_per_device_per_iter":
+                costs["collective_wire_bytes_per_device"],
+            "tflops_per_device":
+                round(costs["flops_per_device"] * iters / makespan / 1e12,
+                      9),
+            "hbm_gb_per_s_per_device": round(hbm_bps / 1e9, 4),
+            "hbm_bw_utilization_tpu_v5e": round(hbm_bps / TPU_V5E.mem_bw,
+                                                9),
+        }
     print(f"  {name:9s} {report['tokens_per_s']:8.1f} tok/s | "
           f"p50 {report['latency_p50_ms']:7.1f}ms | "
           f"host {report['host_overhead_ms_per_token']:6.2f}ms/tok | "
           f"{report['dispatches_per_token']:.2f} dispatches/tok | "
           f"{report['host_roundtrips_per_token']:.2f} round-trips/tok | "
           f"{report['ticks']} ticks")
-    return report
+    dm = report.get("device_metrics")
+    if dm:
+        print(f"  {'':9s} {dm['tflops_per_device'] * 1e3:8.4f} GFLOP/s/dev"
+              f" | hbm {dm['hbm_gb_per_s_per_device']:7.3f} GB/s/dev "
+              f"({dm['hbm_bw_utilization_tpu_v5e']:.2e} of v5e bw) | "
+              f"{dm['n_devices']} device(s) x "
+              f"{dm['decode_loop_iters']} decode iters")
+    return report, sched
 
 
 def main() -> int:
@@ -172,6 +238,18 @@ def main() -> int:
                     help="single seed for the arrival and prompt-length "
                          "RNGs (every configuration replays the same "
                          "draw)")
+    ap.add_argument("--mesh", default="off",
+                    help="also run the fused adaptive configuration "
+                         "sharded over a 'DATA,MODEL' device mesh "
+                         "(launch/mesh.make_serve_mesh) with "
+                         "n_replicas x slots lanes; emits the 'mesh' "
+                         "section of BENCH_serve.json.  Pair with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on CPU hosts")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the mesh run's (or, without --mesh, the "
+                         "fused run's) ExecutionModel decision trace to "
+                         "this file")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serve.json"))
     args = ap.parse_args()
@@ -194,12 +272,13 @@ def main() -> int:
 
     print(f"serve throughput: {n_requests} requests, slots={n_slots}, "
           f"prompts {prompt_lens}, +{new_tokens} tokens each")
-    fused_rep = run_policy("fused", AdaptiveCoreChunk(), cfg, params,
-                           trace, n_slots=n_slots, max_len=max_len,
-                           dispatch_depth="auto")
-    per_tick_rep = run_policy("per-tick", AdaptiveCoreChunk(), cfg, params,
-                              trace, n_slots=n_slots, max_len=max_len)
-    static_rep = run_policy(
+    fused_rep, fused_sched = run_policy(
+        "fused", AdaptiveCoreChunk(), cfg, params, trace,
+        n_slots=n_slots, max_len=max_len, dispatch_depth="auto")
+    per_tick_rep, _ = run_policy(
+        "per-tick", AdaptiveCoreChunk(), cfg, params, trace,
+        n_slots=n_slots, max_len=max_len)
+    static_rep, _ = run_policy(
         "static", StaticCoreChunk(cores=1, chunks_per_core=8), cfg, params,
         trace, n_slots=n_slots, max_len=max_len)
 
@@ -214,15 +293,73 @@ def main() -> int:
             "fused_over_per_tick": fused_over_per_tick,
             "adaptive_over_static": adaptive_over_static,
             "smoke": bool(args.smoke)}
+
+    mesh_ok = True
+    trace_sched = fused_sched
+    if args.mesh.strip().lower() not in ("off", "none", ""):
+        from repro.launch.mesh import make_serve_mesh, n_data_replicas
+
+        data, model_par = (int(x) for x in args.mesh.split(","))
+        mesh = make_serve_mesh(data, model_par)
+        reps = n_data_replicas(mesh)
+        mesh_slots = n_slots * reps    # same per-replica pool geometry
+        print(f"mesh {data}x{model_par} over {mesh.devices.size} "
+              f"{jax.default_backend()} devices: {reps} replicas x "
+              f"{mesh_slots // reps} slots = {mesh_slots} lanes")
+        mesh_rep, trace_sched = run_policy(
+            "mesh", AdaptiveCoreChunk(), cfg, params, trace,
+            n_slots=mesh_slots, max_len=max_len, dispatch_depth="auto",
+            mesh=mesh)
+        n_dev = int(mesh.devices.size)
+        per_dev = round(mesh_rep["tokens_per_s"] / n_dev, 2)
+        mesh_over_single = ratio(mesh_rep, fused_rep)
+        blob["mesh"] = {
+            "mesh_shape": {"data": data, "model": model_par},
+            "n_devices": n_dev,
+            "n_replicas": reps,
+            "n_slots": mesh_slots,
+            "backend": jax.default_backend(),
+            "tokens_per_s_per_device": per_dev,
+            "mesh_over_single_fused": mesh_over_single,
+            "report": mesh_rep,
+        }
+        print(f"  mesh/single-fused: {mesh_over_single:.2f}x global | "
+              f"{per_dev:.1f} tok/s/device over {n_dev} devices")
+        if args.smoke:
+            # See MESH_SMOKE_FLOOR: emulated devices share one cpu, so
+            # the guard is the global ratio (a sharding regression shows
+            # as a collapse) plus the decision loop having gone online.
+            if mesh_over_single < MESH_SMOKE_FLOOR:
+                print("FAIL: mesh-sharded throughput "
+                      f"{mesh_over_single:.3f}x single-device fused "
+                      f"(floor {MESH_SMOKE_FLOOR}) — sharded-serving "
+                      "regression")
+                mesh_ok = False
+            if "online" not in mesh_rep.get("mesh_provenance", []):
+                print("FAIL: serve_mesh_batch decisions never reached "
+                      "online provenance during the timed replay: "
+                      f"{mesh_rep.get('mesh_provenance')}")
+                mesh_ok = False
+
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
         json.dump(blob, f, indent=1)
     print(f"fused/per-tick throughput: {fused_over_per_tick:.2f}x | "
           f"adaptive/static: {adaptive_over_static:.2f}x -> {out}")
+    if args.trace_out:
+        model = trace_sched.decision_model()
+        if model is not None:
+            path = os.path.abspath(args.trace_out)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w") as f:
+                f.write(model.explain() + "\n")
+            print(f"-> {path}")
     if args.smoke and adaptive_over_static < 1.0:
         print("FAIL: fused adaptive below the static baseline "
               f"({adaptive_over_static:.2f}x) — dispatch-granularity "
               "regression")
+        return 1
+    if not mesh_ok:
         return 1
     if not args.smoke and fused_over_per_tick < 1.3:
         print("WARNING: fused decode below the 1.3x target over the "

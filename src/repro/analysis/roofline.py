@@ -173,6 +173,8 @@ def analyze(compiled, *, cfg: ArchConfig, shape: ShapeConfig,
 
 def extract_costs(compiled) -> tuple[float, float, float, dict]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: list of per-program dicts
+        ca = ca[0] if ca else {}
     coll = collective_bytes(compiled.as_text())
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)),

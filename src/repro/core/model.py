@@ -582,6 +582,60 @@ class ExecutionModel:
                     ("slack_s", slack_s), ("urgent", urgent))
             + tuple(inputs)))
 
+    def mesh_batch(self, key: DecisionKey | Hashable, *,
+                   demand: int, n_replicas: int, slots_per_replica: int,
+                   host_tick_s: float, device_step_s: float,
+                   eff: float = overhead_law.DEFAULT_EFFICIENCY,
+                   evidence: Sequence[Hashable] = (),
+                   inputs: tuple = ()) -> Decision:
+        """Per-device batch width for a mesh-sharded serve loop (decision
+        kind ``serve_mesh_batch``): how many decode lanes each
+        data-parallel replica should keep active, so that
+        ``global_batch = n_replicas * per_device_batch``.
+
+        This is the paper's cores question at the next hardware scale:
+        replicas took the place of cores when the serving path moved onto
+        a device mesh, and the per-replica slot count is the resource the
+        executor allocates.  The Overhead-Law prior reads the per-replica
+        workload (``ceil(demand / n_replicas)`` requests) against the
+        per-dispatch fixed cost: ``host_tick_s`` is the T0 every fused
+        dispatch pays once for the whole mesh, ``device_step_s`` the
+        measured per-token device time of the fused loop (the online-
+        refined ``serve_decode_fused`` entry), and the width is Eq. 7's
+        core count with slots-per-replica as the unit pool — opening
+        every lane of an idle mesh is exactly the "more units than the
+        workload can keep efficient" mistake the law prices.
+
+        The key's ``hardware`` field is expected to carry the mesh shape
+        (e.g. ``"cpu-8x...|mesh=4x2"``) so decisions made on one topology
+        never back another.  Provenance follows ``evidence`` (the
+        host-tick and fused-step timing keys): analytic until the serve
+        loop has timed real dispatches, online after — never downgrading.
+        """
+        dkey = DecisionKey.wrap(key)
+        prior: AnalyticOverheadLaw = self.policies["prior"]
+        n_replicas = max(int(n_replicas), 1)
+        slots_per_replica = max(int(slots_per_replica), 1)
+        per_replica = max(-(-int(demand) // n_replicas), 1)  # ceil div
+        d = prior.decide(t_iter=max(device_step_s, 0.0),
+                         count=per_replica,
+                         t0=max(host_tick_s, 0.0),
+                         max_cores=slots_per_replica, eff=eff,
+                         chunks_per_core=1)
+        width = min(max(d.n_cores, 1), slots_per_replica)
+        provenance = self.provenance_of(dkey)
+        for ekey in evidence:
+            provenance = provenance_max(provenance,
+                                        self.provenance_of(ekey))
+        return self._finish(Decision(
+            key=dkey, policy=prior.name, provenance=provenance,
+            cores=width, batch_width=width * n_replicas, acc=d,
+            inputs=(("demand", demand), ("n_replicas", n_replicas),
+                    ("slots_per_replica", slots_per_replica),
+                    ("host_tick_s", host_tick_s),
+                    ("device_step_s", device_step_s), ("eff", eff))
+            + tuple(inputs)))
+
     def default_cores_chunk(self, count: int, max_cores: int) -> AccDecision:
         """The customization-point *default* decision (paper: "splits the
         work into equally sized chunks while utilizing all available

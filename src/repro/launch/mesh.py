@@ -32,6 +32,36 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_serve_mesh(data: int, model: int):
+    """A (data, model) serving mesh over the first ``data*model`` devices.
+
+    Serving meshes are allowed to occupy a *subset* of the host's devices
+    (``jax.make_mesh`` wants the full set), so this reshapes an explicit
+    device slice: 'data' carries the data-parallel slot-group replicas,
+    'model' the tensor-parallel shards within each replica.
+    """
+    data, model = int(data), int(model)
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got ({data}, {model})")
+    devs = jax.devices()
+    need = data * model
+    if need > len(devs):
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {need} devices, "
+            f"host has {len(devs)}")
+    arr = np.asarray(devs[:need]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def n_data_replicas(mesh) -> int:
+    """Number of data-parallel replicas (product of the non-'model'
+    batch axes): the serve pool's slot dim splits into this many groups."""
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
 def make_host_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (tests / CPU runs)."""
     devs = jax.devices()

@@ -118,7 +118,7 @@ def serve_frontend(sched: ServeScheduler, args) -> None:
     goodput = stats["goodput_tokens"] / makespan if makespan else 0.0
     eligible = max(stats["submitted"] - stats["cancelled"], 1)
     print(f"arch={sched.cfg.name} frontend requests={args.requests} "
-          f"slots={args.slots} admission={sched.admission} "
+          f"slots={sched.pool.n_slots} admission={sched.admission} "
           f"ticks={len(sched.trace)}")
     print(f"SLO-goodput {goodput:.1f} tok/s over {makespan:.2f}s | "
           f"completed {stats['completed']} "
@@ -145,6 +145,13 @@ def main() -> None:
     ap.add_argument("--kernel-autotune", action="store_true",
                     help="measured Pallas blocks for prefill/decode "
                          "(winners persist in the calibration cache)")
+    ap.add_argument("--mesh", default="off",
+                    help="mesh-sharded serving: 'DATA,MODEL' device "
+                         "counts (e.g. '4,2': 4 data-parallel replicas "
+                         "x 2-way tensor parallel), or 'off' (single "
+                         "device).  Slots round up to a multiple of the "
+                         "replica count; per-device batch width becomes "
+                         "a serve_mesh_batch engine decision")
     ap.add_argument("--dispatch-depth", default="auto",
                     help="fused decode tokens per device dispatch: "
                          "'auto' (adaptive serve_dispatch_depth decision, "
@@ -211,9 +218,24 @@ def main() -> None:
         depth if depth == "auto" else int(depth)
     admission = args.admission or \
         ("adaptive" if args.frontend else "greedy")
-    sched = ServeScheduler(cfg, params, n_slots=args.slots, max_len=max_len,
+    mesh, n_slots = None, args.slots
+    if args.mesh.strip().lower() not in ("off", "none", ""):
+        from .mesh import make_serve_mesh, n_data_replicas
+
+        data, model_par = (int(x) for x in args.mesh.split(","))
+        mesh = make_serve_mesh(data, model_par)
+        reps = n_data_replicas(mesh)
+        if n_slots % reps:      # slot dim must split into replica groups
+            n_slots = -(-n_slots // reps) * reps
+            print(f"mesh: rounding --slots {args.slots} up to {n_slots} "
+                  f"({reps} data replicas)")
+        print(f"mesh {data}x{model_par} over {mesh.devices.size} of "
+              f"{len(jax.devices())} {jax.default_backend()} devices | "
+              f"{reps} replicas x {n_slots // reps} slots")
+    sched = ServeScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
                            executor=executor, kernel_tuner=tuner,
-                           dispatch_depth=depth, admission=admission)
+                           dispatch_depth=depth, admission=admission,
+                           mesh=mesh)
     sched.warmup()
 
     if args.frontend:
@@ -246,7 +268,7 @@ def main() -> None:
     ttfts = [sched.requests[rid].first_token_at - sched.requests[rid].arrival
              for rid in rids]
     gen = sum(len(outs[rid]) for rid in rids)
-    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+    print(f"arch={cfg.name} requests={args.requests} slots={sched.pool.n_slots} "
           f"ticks={len(sched.trace)} dispatch-depth={args.dispatch_depth} "
           f"({sched.decode_dispatches} decode dispatches, "
           f"{sched.host_roundtrips} host round-trips, "

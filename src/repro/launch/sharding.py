@@ -212,3 +212,20 @@ def cache_specs(cfg: ArchConfig, mesh, global_batch: int,
 def to_shardings(mesh, spec_tree: Any) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_shardings(cfg: ArchConfig, mesh, params, n_slots: int,
+                    max_len: int) -> tuple[Any, Any]:
+    """(param_shardings, cache_shardings) for mesh-sharded serving.
+
+    Weights are tensor-parallel over 'model' only — serving drops the
+    'data' axis from the weight rules (no optimizer state to shard, and
+    FSDP gathers per decoded token would dominate the step), so each
+    data replica holds a full TP copy.  The slot pool's cache specs come
+    from the same ``cache_specs`` rules as the training/dry-run path:
+    the slot (batch) dim splits over the data axes when ``n_slots``
+    divides, KV heads over 'model'.
+    """
+    pspecs = param_specs(params, mesh, drop_axes=("data",))
+    cspecs = cache_specs(cfg, mesh, n_slots, max_len)
+    return to_shardings(mesh, pspecs), to_shardings(mesh, cspecs)

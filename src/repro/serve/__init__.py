@@ -4,7 +4,7 @@ from .engine import (ServeEngine, make_decode_step, make_prefill_step,
                      prefill_segments)
 from .frontend import (QueueFullError, RequestRecord, ServeFrontend,
                        TokenStream)
-from .kv_cache import SlotKVCachePool
+from .kv_cache import CacheLayoutError, SlotKVCachePool, SlotOverflowError
 from .loadgen import (GENERATORS, SLOModel, TraceRequest, bursty_trace,
                       heavy_tailed_trace, materialize, poisson_trace,
                       trace_summary)
@@ -15,7 +15,7 @@ from .scheduler import (TERMINAL_STATES, PromptTooLongError, Request,
 __all__ = [
     "ServeEngine", "make_decode_step", "make_prefill_step",
     "prefill_segments",
-    "SlotKVCachePool",
+    "SlotKVCachePool", "SlotOverflowError", "CacheLayoutError",
     "ServeScheduler", "Request", "RequestState", "TickRecord",
     "percentile", "PromptTooLongError", "TERMINAL_STATES",
     "ServeFrontend", "TokenStream", "RequestRecord", "QueueFullError",

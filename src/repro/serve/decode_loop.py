@@ -92,7 +92,8 @@ def masked_merge(caches, new_caches, active):
 
 def make_fused_decode_step(cfg: ArchConfig, *, window: int | None = None,
                            kernel_tuner=None,
-                           max_depth: int = DEFAULT_MAX_DEPTH) -> Callable:
+                           max_depth: int = DEFAULT_MAX_DEPTH,
+                           cache_shardings=None) -> Callable:
     """Build the jitted fused decode step.
 
     ``fused(params, caches, toks, poss, steps)`` advances lane ``i`` by
@@ -111,11 +112,20 @@ def make_fused_decode_step(cfg: ArchConfig, *, window: int | None = None,
     The loop runs ``max(steps)`` iterations (a traced bound: one
     compilation for all depths), so idle lanes never stretch the trip
     count beyond the deepest active budget.
+
+    ``cache_shardings`` (a pytree of NamedShardings mirroring the slot
+    pool) pins the mesh-sharded pool's placement at loop entry with a
+    sharding constraint: the donated output must alias the sharded
+    input buffers exactly, and the constraint stops GSPMD from electing
+    to reshard the pool across the ``fori_loop`` carry.
     """
     lanes = make_lane_step(cfg, window=window, kernel_tuner=kernel_tuner)
     max_depth = max(int(max_depth), 1)
 
     def fused(params, caches, toks, poss, steps):
+        if cache_shardings is not None:
+            caches = jax.lax.with_sharding_constraint(caches,
+                                                      cache_shardings)
         n = toks.shape[0]
         out_buf = jnp.zeros((max_depth, n), jnp.int32)
 

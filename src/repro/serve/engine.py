@@ -94,7 +94,8 @@ class ServeEngine:
                  window: int | None = None,
                  acc: AdaptiveCoreChunk | None = None,
                  executor=None, kernel_tuner=None,
-                 dispatch_depth: int | str | None = None):
+                 dispatch_depth: int | str | None = None,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.window = window if window is not None else cfg.attn_window
@@ -114,6 +115,10 @@ class ServeEngine:
         # decode, int = fixed tokens per dispatch, "auto" = adaptive
         # serve_dispatch_depth decisions.  Scheduler path only.
         self.dispatch_depth = dispatch_depth
+        # Device mesh for sharded serving (launch/mesh.make_serve_mesh);
+        # scheduler path only — the legacy lock-step batch loop stays
+        # single-device.
+        self.mesh = mesh
         self._decode = jax.jit(make_decode_step(
             cfg, window=self.window, kernel_tuner=kernel_tuner))
         self._sched = None   # lazily built, reused across generate() calls
@@ -201,7 +206,7 @@ class ServeEngine:
                 self.cfg, self.params, n_slots=bsz, max_len=self.max_len,
                 window=self.window, executor=self.executor, acc=self.acc,
                 kernel_tuner=self.kernel_tuner,
-                dispatch_depth=self.dispatch_depth)
+                dispatch_depth=self.dispatch_depth, mesh=self.mesh)
         rids = [self._sched.submit(prompt[i], max_new_tokens=n_new)
                 for i in range(bsz)]
         outs = self._sched.run_until_idle()

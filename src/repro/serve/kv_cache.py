@@ -42,11 +42,42 @@ def _maybe(fn):
     return lambda x: None if x is None else fn(x)
 
 
+class SlotOverflowError(ValueError):
+    """A lane's position would pass its slot's ``max_len`` storage —
+    cache writes past that point land in another slot's rows (silent
+    wraparound through the ring/dynamic-slice indexing).  The scheduler
+    budgets every fused dispatch against the slot's remaining room, so
+    raising here means that accounting broke; typed so the serve loop
+    can turn it into a structured failure instead of corrupt output."""
+
+    def __init__(self, slot: int, pos: int, max_len: int):
+        self.slot = slot
+        self.pos = pos
+        self.max_len = max_len
+        super().__init__(
+            f"slot {slot} advanced past max_len: {pos} > {max_len}")
+
+
+class CacheLayoutError(ValueError):
+    """An adopted cache tree does not match the pool's layout.  The
+    fused decode step *donates* the pool, so adopt() is a blind rebind —
+    a step built for different geometry (other slot count, other arch,
+    other dtype) would silently become the pool and corrupt every later
+    slot read.  Checked structurally (shapes/dtypes, no device sync)."""
+
+
+def _layout(tree) -> tuple:
+    """Hashable (shape, dtype) signature of a cache tree — what adopt()
+    compares; flattening a few dozen array stubs is host microseconds."""
+    return tuple((tuple(x.shape), str(x.dtype))
+                 for x in jax.tree.leaves(tree))
+
+
 class SlotKVCachePool:
     """Fixed-size cache slots with a free-list and per-slot positions."""
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
-                 window: int | None = None, dtype=None):
+                 window: int | None = None, dtype=None, mesh=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.cfg = cfg
@@ -55,6 +86,20 @@ class SlotKVCachePool:
         self.window = window if window is not None else cfg.attn_window
         self.caches = lm.init_caches(cfg, n_slots, max_len,
                                      window=self.window, dtype=dtype)
+        # Mesh-sharded placement: the slot (batch) dim splits into
+        # data-parallel groups, KV heads over 'model' (the same
+        # launch/sharding cache_specs rules the dry-run path uses).  The
+        # device_put happens once, before serving — placement of the one
+        # allocation, not a reallocation.
+        self.mesh = mesh
+        self.shardings = None
+        if mesh is not None:
+            from ..launch import sharding as sharding_lib
+
+            self.shardings = sharding_lib.to_shardings(
+                mesh, sharding_lib.cache_specs(cfg, mesh, n_slots, max_len))
+            self.caches = jax.device_put(self.caches, self.shardings)
+        self._layout_sig = _layout(self.caches)
         self.allocations = 1            # init_caches calls ever made
         self._free = list(range(n_slots - 1, -1, -1))
         self.positions = [0] * n_slots  # tokens cached per slot (host side)
@@ -117,7 +162,11 @@ class SlotKVCachePool:
                         (s,) + (0,) * (c.ndim - 1)),
                     caches, row, is_leaf=lambda x: x is None)
 
-            self._write_jit = jax.jit(write, donate_argnums=0)
+            # Explicit out_shardings on the mesh path: donation aliasing
+            # requires output placement to equal the input's, and pinning
+            # it stops GSPMD from ever resharding the pool mid-serve.
+            self._write_jit = jax.jit(write, donate_argnums=0,
+                                      out_shardings=self.shardings)
         self.caches = self._write_jit(self.caches, row_caches,
                                       jnp.int32(slot))
 
@@ -128,20 +177,30 @@ class SlotKVCachePool:
         arrays' buffers were aliased into the new ones by XLA; after
         this call the previous ``self.caches`` must never be touched
         again.  No allocation happens: ``allocations`` stays wherever
-        it is (the invariant the donation tests pin at 1)."""
+        it is (the invariant the donation tests pin at 1).
+
+        Raises ``CacheLayoutError`` when the adopted tree's shapes or
+        dtypes differ from the pool's — the step that produced it was
+        built for different geometry, and rebinding would corrupt every
+        later slot read."""
+        if _layout(new_caches) != self._layout_sig:
+            raise CacheLayoutError(
+                f"adopted cache tree does not match the pool layout "
+                f"(n_slots={self.n_slots}, max_len={self.max_len}, "
+                f"arch={self.cfg.name})")
         self.caches = new_caches
 
     def advance(self, slot: int, n: int) -> int:
         """Advance ``slot``'s position by ``n`` cached tokens (the fused
         decode path moves a slot by up to ``k`` per dispatch).  The
-        caller must have budgeted ``n`` against ``max_len``; overshoot
-        would mean cache writes past the slot's storage."""
+        caller must have budgeted ``n`` against ``max_len``; raises
+        ``SlotOverflowError`` on overshoot — cache writes past the
+        slot's storage would wrap into other slots' rows."""
         if n < 0:
             raise ValueError(f"negative advance: {n}")
         pos = self.positions[slot] + n
         if pos > self.max_len:
-            raise ValueError(
-                f"slot {slot} advanced past max_len: {pos} > {self.max_len}")
+            raise SlotOverflowError(slot, pos, self.max_len)
         self.positions[slot] = pos
         return pos
 

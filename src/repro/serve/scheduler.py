@@ -38,6 +38,13 @@ Mechanics:
   (``serve_dispatch_depth``): the measured host overhead per tick is
   the Overhead Law's T0, the measured device time per token its
   t_iter, and the depth is the chunk that amortises one to the other.
+* With ``mesh`` set (launch/mesh.make_serve_mesh), the whole serving
+  path runs sharded over a device mesh: weights tensor-parallel over
+  'model' within each replica, the slot pool's batch dim data-parallel
+  across replicas, and the global active-lane count capped by a
+  ``serve_mesh_batch`` engine decision — per-device batch width is the
+  paper's cores question at mesh scale
+  (``global_batch = n_replicas * per_device_batch``).
 * Everything is deterministic under ``SequentialExecutor`` (tick trace is
   a pure function of arrivals), which is what the tests pin down; the
   fused path emits token-identical output (greedy decode over the same
@@ -61,7 +68,8 @@ from ..core.acc import AdaptiveCoreChunk
 from ..core.executor import Chunk, SequentialExecutor
 from ..core.feedback import tag_workload
 from ..core.future import Future, when_all
-from ..core.model import DecisionKey, ExecutionModel, decision_overhead_s
+from ..core.model import (DecisionKey, ExecutionModel, decision_overhead_s,
+                          hardware_key)
 from ..core.properties import params_of
 from ..models import flags, lm
 from ..train.autotune import serve_profiles
@@ -171,7 +179,7 @@ class ServeScheduler:
                  max_dispatch_depth: int = DEFAULT_MAX_DEPTH,
                  pipeline: int = 2, sync_every: int = 8,
                  admission: str = "greedy",
-                 shed_expired: bool = False):
+                 shed_expired: bool = False, mesh=None):
         kinds = set(cfg.layer_kinds())
         if "cross_attn" in kinds:
             raise ValueError(
@@ -193,8 +201,33 @@ class ServeScheduler:
         # most one candidate search — and none when the winner is already
         # persisted in the calibration store.
         self.kernel_tuner = kernel_tuner
+        # Mesh-sharded serving (launch/mesh + launch/sharding): weights
+        # go tensor-parallel over 'model' within each replica (serving
+        # drops 'data' from the weight rules — full TP copy per
+        # replica), the slot pool's batch dim splits into data-parallel
+        # groups, and every compiled step (prefill, decode, the fused
+        # loop) partitions over the committed input placements.
+        self.mesh = mesh
+        self.n_replicas = 1
+        self.mesh_desc = None
+        if mesh is not None:
+            from ..launch import mesh as mesh_lib
+            from ..launch import sharding as sharding_lib
+
+            self.n_replicas = mesh_lib.n_data_replicas(mesh)
+            if n_slots % self.n_replicas:
+                raise ValueError(
+                    f"n_slots={n_slots} must divide into "
+                    f"{self.n_replicas} data-parallel replicas "
+                    f"(mesh {dict(mesh.shape)})")
+            self.mesh_desc = "x".join(
+                str(mesh.shape[a]) for a in mesh.axis_names)
+            pshard, _ = sharding_lib.serve_shardings(
+                cfg, mesh, params, n_slots, max_len)
+            self.params = jax.device_put(params, pshard)
+        self.slots_per_replica = n_slots // self.n_replicas
         self.pool = SlotKVCachePool(cfg, n_slots, max_len,
-                                    window=self.window)
+                                    window=self.window, mesh=mesh)
         self.clock = clock
         self.chunk_buckets = tuple(sorted(set(int(b) for b in chunk_buckets
                                               if b > 0))) or (max_len,)
@@ -242,6 +275,13 @@ class ServeScheduler:
                 f"got {admission!r}")
         self.admission = admission
         self.admit_key = DecisionKey("serve_admission", sig)
+        # Mesh-aware batch width (decision kind ``serve_mesh_batch``):
+        # the DecisionKey's hardware field is extended with the mesh
+        # shape, so a width chosen on a (4,2) mesh never backs a (2,4)
+        # run on the same silicon.
+        self.mesh_key = None if mesh is None else DecisionKey(
+            "serve_mesh_batch", sig,
+            hardware=f"{hardware_key()}|mesh={self.mesh_desc}")
         # Deadline enforcement: with ``shed_expired`` a WAITING request
         # whose deadline has already passed is shed *before* prefill
         # (its tokens would be thrown away anyway); finished requests
@@ -269,6 +309,11 @@ class ServeScheduler:
         # derives host-overhead-per-token and dispatches-per-token).
         self.decode_dispatches = 0
         self.decode_tokens = 0
+        # Decode loop iterations executed (fused: max take per dispatch
+        # — the fori_loop trip count; per-tick: 1 per dispatch).  This is
+        # the multiplier for decode_cost_analysis()'s per-iteration
+        # flops/bytes in the benchmark's TFLOP/s + HBM-BW accounting.
+        self.decode_loop_iters = 0
         self.host_roundtrips = 0    # block/device_get events, all paths
         self.host_overhead_s = 0.0  # tick wall-clock minus device waits
         self._blocked_s = 0.0
@@ -523,9 +568,11 @@ class ServeScheduler:
             r.deadline if r.deadline is not None else float("inf"),
             r.arrival, r.rid))
         width = self._decide_admission()
+        lane_cap = self._decide_mesh_batch()
         admitted = []
         while self._waiting and self.pool.free_slots() \
-                and (width is None or len(admitted) < width):
+                and (width is None or len(admitted) < width) \
+                and (lane_cap is None or len(self._active) < lane_cap):
             req = self._waiting.pop(0)
             req.slot = self.pool.acquire(req.rid)
             req.state = RequestState.PREFILL
@@ -580,6 +627,47 @@ class ServeScheduler:
             evidence=(self.host_tick_key, self.prefill_key),
             inputs=inputs)
         return decision.cores
+
+    def _decide_mesh_batch(self) -> int | None:
+        """Global active-lane cap for a mesh-sharded pool (decision kind
+        ``serve_mesh_batch``), or None when serving single-device / the
+        queue is empty / the params object carries no store.
+
+        Per-device batch width is the mesh's cores/chunk question: the
+        engine amortises the measured per-dispatch host overhead
+        (``serve_host_tick``) against the measured fused device step
+        (``serve_decode_fused``) over the per-replica demand, and the
+        cap is ``width * n_replicas`` — admission never opens more
+        concurrent lanes per replica than the dispatch can keep
+        efficient.  Only consulted when there is something to admit, so
+        decode-only ticks pay no engine query."""
+        if self.mesh is None or not self._waiting:
+            return None
+        model = self.decision_model()
+        if model is None:       # static params object: every slot
+            return None
+        demand = len(self._waiting) + len(self._active)
+        evidence = [self.host_tick_key, self.fused_key]
+        inputs: tuple = (("mesh", self.mesh_desc),)
+        host = model.smoothed_t_iter(self.host_tick_key)
+        if host is None:
+            host = self.acc.calibrate_t0(self.executor) \
+                + 4.0 * decision_overhead_s()
+            inputs += (("seeded", True),)
+        dev = model.smoothed_t_iter(self.fused_key)
+        if dev is None:
+            dev = self.acc.measure_iteration(
+                self.executor, self.decode_profile, max(demand, 1),
+                key=self.decode_key)
+            evidence.append(self.decode_key)
+        decision = model.mesh_batch(
+            self.mesh_key, demand=demand, n_replicas=self.n_replicas,
+            slots_per_replica=self.slots_per_replica,
+            host_tick_s=host, device_step_s=dev,
+            eff=getattr(self.acc, "efficiency",
+                        overhead_law.DEFAULT_EFFICIENCY),
+            evidence=tuple(evidence), inputs=inputs)
+        return decision.batch_width
 
     def _decide(self) -> tuple[int, int, int]:
         """(queued tokens, batch width, prefill chunk) for this tick.
@@ -770,6 +858,7 @@ class ServeScheduler:
         self._blocked_s += time.perf_counter() - t_dev
         self.decode_dispatches += 1
         self.decode_tokens += len(decs)
+        self.decode_loop_iters += 1
         self.host_roundtrips += 2   # block_until_ready + device_get
 
         decoded, finished = [], []
@@ -789,8 +878,41 @@ class ServeScheduler:
             self._fused_jit = make_fused_decode_step(
                 self.cfg, window=self.window,
                 kernel_tuner=self.kernel_tuner,
-                max_depth=self.max_dispatch_depth)
+                max_depth=self.max_dispatch_depth,
+                cache_shardings=self.pool.shardings)
         return self._fused_jit
+
+    def decode_cost_analysis(self) -> dict | None:
+        """Per-device XLA costs of one decode loop iteration: flops,
+        HBM bytes accessed, and collective wire bytes (analysis/roofline
+        conventions; ``cost_analysis()`` is per-device, and a
+        ``fori_loop`` body is counted once — i.e. the numbers are per
+        iteration, so achieved TFLOP/s = flops × ``decode_loop_iters`` /
+        makespan).  Lowering reuses the already-compiled executable via
+        the jit cache; None when nothing has compiled cleanly."""
+        from ..analysis import roofline
+
+        n = self.pool.n_slots
+        toks = jnp.zeros(n, jnp.int32)
+        poss = self.pool.positions_array()
+        try:
+            if self._fused:
+                lowered = self._fused_step().lower(
+                    self.params, self.pool.caches, toks, poss,
+                    jnp.zeros(n, jnp.int32))
+            else:
+                lowered = self._decode_step().lower(
+                    self.params, self.pool.caches, toks, poss,
+                    jnp.zeros(n, dtype=bool))
+            flops, byts, wire, _ = roofline.extract_costs(
+                lowered.compile())
+        except Exception:       # pragma: no cover - backend-dependent
+            return None
+        return {"flops_per_device": flops,
+                "hbm_bytes_per_device": byts,
+                "collective_wire_bytes_per_device": wire,
+                "n_devices": 1 if self.mesh is None
+                else self.mesh.devices.size}
 
     def _decode_toks(self) -> jax.Array:
         """The device-resident last-token carry, with any host-known
@@ -898,6 +1020,8 @@ class ServeScheduler:
         self._dev_toks = final_toks
         self.decode_dispatches += 1
         self.decode_tokens += total
+        self.decode_loop_iters += max((take for _, _, take in lanes),
+                                      default=0)
         self._inflight.append((out_buf, lanes))
 
         decoded, finished = [], []

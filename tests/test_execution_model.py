@@ -222,6 +222,44 @@ def test_dispatch_depth_provenance_follows_evidence():
     assert d.provenance == ONLINE
 
 
+def test_mesh_batch_decision_and_provenance():
+    """serve_mesh_batch: per-replica width from the Overhead-Law prior
+    over the per-replica slot count, global batch_width = width x
+    replicas; analytic until the serve loop's evidence keys carry real
+    observations, then online — and never back."""
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    key = DecisionKey("serve_mesh_batch", ("cfg",),
+                      hardware="cpu:cpu:8|mesh=4x2")
+    host_key = ("serve_host_tick", "cfg")
+    dev_key = ("serve_decode_fused", "cfg")
+    d = m.mesh_batch(key, demand=8, n_replicas=4, slots_per_replica=2,
+                     host_tick_s=1e-3, device_step_s=1e-3,
+                     evidence=(host_key, dev_key))
+    assert d.provenance == ANALYTIC
+    assert 1 <= d.cores <= 2                       # capped per replica
+    assert d.batch_width == d.cores * 4            # global lane cap
+    assert d.key.hardware == "cpu:cpu:8|mesh=4x2"  # mesh-shaped key
+    # expensive device step over many lanes, cheap host tick -> the
+    # overhead law widens the per-replica batch to the slot cap
+    wide = m.mesh_batch(key, demand=64, n_replicas=4, slots_per_replica=8,
+                        host_tick_s=1e-4, device_step_s=5e-2,
+                        evidence=(host_key, dev_key))
+    assert wide.cores == 8 and wide.batch_width == 32
+    m.observe(host_key, 1, 2e-3)
+    m.observe(dev_key, 8, 8e-3)
+    d2 = m.mesh_batch(key, demand=8, n_replicas=4, slots_per_replica=2,
+                      host_tick_s=2e-3, device_step_s=1e-3,
+                      evidence=(host_key, dev_key))
+    assert d2.provenance == ONLINE
+    # provenance never downgrades once the store holds observations,
+    # even on a later call with an empty evidence tuple
+    d3 = m.mesh_batch(key, demand=2, n_replicas=4, slots_per_replica=2,
+                      host_tick_s=2e-3, device_step_s=1e-3)
+    assert d3.provenance == ONLINE
+    assert all(e.decision.key.kind == "serve_mesh_batch"
+               for e in m.trace.entries("serve_mesh_batch"))
+
+
 # ---------------------------------------------------------------------------
 # Measured-search policy through the engine
 # ---------------------------------------------------------------------------

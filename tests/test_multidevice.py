@@ -148,11 +148,60 @@ print(f"DRYRUN_SMALL_OK loss={float(m['loss']):.3f} "
 """
 
 
+MESH_SERVE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_config
+from repro.core.acc import AdaptiveCoreChunk
+from repro.core.adaptive import adaptive
+from repro.core.executor import SequentialExecutor
+from repro.data import make_batch
+from repro.launch.mesh import make_serve_mesh, n_data_replicas
+from repro.models import lm
+from repro.serve import ServeScheduler
+
+# Sharded fused serving must produce byte-identical tokens to the
+# single-device fused path: tensor-parallel matmuls within a replica
+# plus the 'data'-sharded slot pool may not change a single argmax.
+cfg = get_config("qwen3-0.6b").reduced()
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+tokens = make_batch(cfg, 3, 14, kind="prefill", seed=11)["tokens"]
+spec = [(14, 9), (9, 3), (6, 7)]      # (prompt_len, new_tokens) per req
+
+def run(depth, mesh=None, n_slots=2):
+    sched = ServeScheduler(
+        cfg, params, n_slots=n_slots, max_len=48,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=depth, mesh=mesh)
+    sched.warmup()
+    rids = [sched.submit(tokens[i][:p], max_new_tokens=n)
+            for i, (p, n) in enumerate(spec)]
+    outs = sched.run_until_idle()
+    assert sched.pool.allocations == 1, "donation invariant broke"
+    return [outs[r] for r in rids], sched
+
+mesh = make_serve_mesh(4, 2)
+assert n_data_replicas(mesh) == 4
+for k in (1, 4):
+    ref, _ = run(k)
+    got, sched = run(k, mesh=mesh, n_slots=4)
+    assert got == ref, (k, got, ref)
+    entries = sched.decision_model().trace.entries("serve_mesh_batch")
+    assert entries, "mesh run made no serve_mesh_batch decisions"
+    for e in entries:
+        assert "mesh=4x2" in e.decision.key.hardware
+        assert e.decision.batch_width == e.decision.cores * 4
+print("MESH_SERVE_OK")
+"""
+
+
 @pytest.mark.parametrize("name,code,marker", [
     ("mesh_algorithms", MESH_ALGOS, "MESH_OK"),
     ("compressed_dp", COMPRESSED_DP, "COMPRESS_OK"),
     ("elastic", ELASTIC, "ELASTIC_OK"),
     ("dryrun_small", DRYRUN_SMALL, "DRYRUN_SMALL_OK"),
+    ("mesh_serve", MESH_SERVE, "MESH_SERVE_OK"),
 ])
 def test_multidevice(subproc, name, code, marker):
     r = subproc(code, n_devices=8)

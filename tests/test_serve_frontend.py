@@ -324,6 +324,30 @@ def test_streaming_tokens_match_batch_path(setup):
     assert got[1] == ref[ref_ids[1]]
 
 
+def test_burst_drain_spreads_inter_token_times(setup):
+    """A fused dispatch drains k tokens in one _pump() call; their
+    recorded emission times must spread over the dispatch interval,
+    not collapse onto one stamp (the itl_p99_ms=0.0 bug: every
+    inter-token gap inside a burst measured exactly zero)."""
+    cfg, params = setup
+    tokens = make_batch(cfg, 1, 10, kind="prefill", seed=33)["tokens"]
+    n_new = 8
+    sched = make_sched(cfg, params, n_slots=1, max_len=32,
+                       dispatch_depth=4)    # fused: 4-token drain bursts
+
+    async def go():
+        async with ServeFrontend(sched) as fe:
+            stream = await fe.submit(tokens[0], n_new)
+            return [t async for t in stream], stream.record
+
+    out, rec = asyncio.run(go())
+    assert len(out) == n_new and len(rec.token_times) == n_new
+    gaps = [b - a for a, b in zip(rec.token_times, rec.token_times[1:])]
+    assert all(g > 0 for g in gaps), gaps   # strictly increasing stamps
+    # stamps stay causal: anchored after the first-token time
+    assert rec.token_times[0] >= rec.first_token_at
+
+
 def test_adaptive_admission_decisions_in_trace(setup):
     """admission='adaptive': every throttled admission round is a
     serve_admission engine decision with its inputs on the record."""

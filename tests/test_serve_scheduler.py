@@ -327,6 +327,42 @@ def test_slot_pool_free_list_and_double_release(setup):
     assert pool.allocations == 1
 
 
+def test_slot_pool_advance_overflow_is_typed(setup):
+    """advance() past max_len must raise SlotOverflowError (a silent
+    wraparound writes into other slots' cache rows mid-fused-dispatch)."""
+    from repro.serve import SlotKVCachePool, SlotOverflowError
+
+    cfg, _ = setup
+    pool = SlotKVCachePool(cfg, n_slots=2, max_len=16)
+    slot = pool.acquire("a")
+    assert pool.advance(slot, 16) == 16         # exactly full is fine
+    with pytest.raises(SlotOverflowError) as exc:
+        pool.advance(slot, 1)
+    assert exc.value.slot == slot
+    assert exc.value.pos == 17 and exc.value.max_len == 16
+    assert isinstance(exc.value, ValueError)    # old callers still catch
+    assert pool.positions[slot] == 16           # overshoot not applied
+    with pytest.raises(ValueError):
+        pool.advance(slot, -1)
+
+
+def test_slot_pool_adopt_rejects_layout_mismatch(setup):
+    """adopt() is a blind rebind after a donated step — a tree from a
+    step with different geometry must be rejected, not adopted."""
+    from repro.serve import CacheLayoutError, SlotKVCachePool
+
+    cfg, _ = setup
+    pool = SlotKVCachePool(cfg, n_slots=2, max_len=16)
+    other = SlotKVCachePool(cfg, n_slots=4, max_len=16)   # wrong n_slots
+    with pytest.raises(CacheLayoutError):
+        pool.adopt(other.caches)
+    short = SlotKVCachePool(cfg, n_slots=2, max_len=8)    # wrong max_len
+    with pytest.raises(CacheLayoutError):
+        pool.adopt(short.caches)
+    pool.adopt(pool.caches)                               # matching: fine
+    assert pool.allocations == 1
+
+
 # ---------------------------------------------------------------------------
 # fused decode loop (serve/decode_loop.py)
 # ---------------------------------------------------------------------------
