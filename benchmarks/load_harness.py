@@ -156,7 +156,7 @@ def run_config(name: str, cfg, params, mat_trace, *, n_slots: int,
     ttfts = [r.first_token_at - r.submitted_at for r in recs
              if r.first_token_at is not None]
     itls = [b - a for r in recs
-            for a, b in zip(r.token_times, r.token_times[1:])]
+            for a, b in zip(r.token_times, r.token_times[1:], strict=False)]
     gen = sum(r.tokens for r in recs)
     report = {
         "policy": name,

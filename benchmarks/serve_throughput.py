@@ -83,7 +83,7 @@ def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
     rng = np.random.RandomState(seed)
     t = 0.0
     trace = []
-    for i in range(n_requests):
+    for _ in range(n_requests):
         t += float(rng.exponential(mean_interarrival_s))
         # Arrival gaps, prompt lengths and prompt tokens all come from
         # the one seeded stream: a single --seed pins the whole load.

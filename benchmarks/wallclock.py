@@ -36,8 +36,8 @@ def bench_kernels() -> list[str]:
          lambda: R.inclusive_scan_ref(x)),
     ]
     for name, kf, rf in pairs:
-        tk = _time(lambda: kf())
-        tr = _time(lambda: rf())
+        tk = _time(kf)
+        tr = _time(rf)
         rows.append(f"kernel/{name}/interp,{tk*1e6:.1f},ref_us={tr*1e6:.1f}")
     q = jnp.asarray(np.random.RandomState(1).randn(1, 4, 256, 64)
                     .astype(np.float32))

@@ -1,0 +1,41 @@
+"""repro-lint: hot-path static analysis for the hazards this codebase
+lives on.
+
+The runtime-adaptation thesis only holds when the execution layer's
+overheads are what the ExecutionModel believes they are: a stray host
+sync inflates every measured T0, a silent recompile poisons a t_iter
+EMA for the life of the calibration store, and a GSPMD reshard inside
+the fused decode loop turns the donation invariant into silent cache
+corruption.  PRs 2-7 established those invariants by hand (and twice
+re-established them after regressions: the PR-5 181ms eager-scatter
+compile, the PR-7 mid-serve reshard pinning); this package makes them
+machine-checked.
+
+Rules (AST-based, flow-insensitive; see rules.py for details):
+
+=======  ==========================================================
+RL001    use-after-donation: a value passed at a donated jit
+         position is read again before the rebind (``adopt()``)
+RL002    implicit host sync inside functions reachable from the
+         serve hot path (``_tick_fused`` / ``decode_loop`` /
+         ``frontend._pump``) via a conservative call-graph walk
+RL003    recompile hazard: ``jax.jit`` constructed inside a loop
+         body (one compile per iteration)
+RL004    tracer leak: assignment to ``self.*`` or a global from
+         inside a jitted / ``fori_loop`` / ``scan`` body
+RL005    blocking call inside ``async def`` (``time.sleep``,
+         synchronous device transfers, unbounded ``queue.get``)
+RL006    decision-key instability: ``id()``-derived or unhashable
+         components flowing into ``DecisionKey``
+=======  ==========================================================
+
+Findings print ruff-style (``path:line:col: CODE message``); a line is
+suppressed with ``# repro-lint: disable=RL002`` (comma-separate for
+several codes).  ``python -m repro.analysis.lint src tests benchmarks``
+exits non-zero when any unsuppressed finding remains — the CI gate.
+"""
+from .engine import (Finding, LintConfig, SourceFile, format_finding,
+                     lint_paths, load_file)
+
+__all__ = ["Finding", "LintConfig", "SourceFile", "format_finding",
+           "lint_paths", "load_file"]

@@ -1,0 +1,48 @@
+"""CLI: ``python -m repro.analysis.lint src tests benchmarks``.
+
+Ruff-style output, one line per finding; exit 1 when any unsuppressed
+finding remains (the CI ``lint-repro`` gate), 0 on a clean tree.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .engine import RULE_CODES, LintConfig, format_finding, lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro-lint: hot-path static analysis "
+                    f"({', '.join(RULE_CODES)})")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to lint")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes to run "
+                         "(default: all)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the summary line")
+    args = ap.parse_args(argv)
+
+    select = None
+    if args.select:
+        select = frozenset(c.strip().upper()
+                           for c in args.select.split(",") if c.strip())
+        unknown = select - set(RULE_CODES)
+        if unknown:
+            ap.error(f"unknown rule code(s): {', '.join(sorted(unknown))}")
+
+    findings, suppressed = lint_paths(args.paths,
+                                      LintConfig(select=select))
+    for f in findings:
+        print(format_finding(f))
+    if not args.quiet:
+        n = len(findings)
+        print(f"repro-lint: {n} finding{'s' if n != 1 else ''} "
+              f"({suppressed} suppressed)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,115 @@
+"""Conservative call graph for the RL002 hot-path walk.
+
+Resolution is by *bare name*: a reference to ``free_slots`` — as a
+call, an attribute access (property reads count: they run code), or a
+bare name (callbacks handed to executors count: they run later) —
+edges to every function of that name defined in the group.  That
+over-approximates reachability, which is the correct direction for a
+gate: a host sync is flagged if it *might* be on the hot path, and the
+per-line suppression (with its justification comment) is the sanctioned
+escape for the syncs the design actually budgets (the drain's one
+``device_get`` per dispatch, the periodic honest-timing sync).
+
+Groups: all files under a ``serve`` directory lint as one graph (the
+real serving stack spans scheduler/kv_cache/decode_loop/frontend); a
+standalone file that defines a root (``_tick_fused``, ``_pump``, or a
+module named ``decode_loop``) forms its own single-file graph, which is
+what lets the golden fixtures exercise the rule in isolation.
+"""
+from __future__ import annotations
+
+import ast
+import collections
+import pathlib
+from typing import Iterator
+
+from .engine import LintConfig, SourceFile
+from .rules import functions
+
+
+def _defines_root(sf: SourceFile, config: LintConfig) -> bool:
+    if sf.module in config.hot_modules:
+        return True
+    return any(fn.name in config.hot_roots
+               for _, fn in functions(sf.tree))
+
+
+def hot_groups(files: list[SourceFile],
+               config: LintConfig) -> list[list[SourceFile]]:
+    hot, rest = [], []
+    for sf in files:
+        dirs = pathlib.Path(sf.path).parts[:-1]
+        (hot if any(d in config.hot_dirs for d in dirs) else rest).append(sf)
+    groups = [hot] if hot else []
+    groups.extend([sf] for sf in rest if _defines_root(sf, config))
+    return groups
+
+
+def _is_property(fn: ast.AST) -> bool:
+    decs = getattr(fn, "decorator_list", ())
+    return any(isinstance(d, ast.Name) and d.id in ("property",
+                                                    "cached_property")
+               for d in decs)
+
+
+def _refs(fn: ast.AST, properties: set[str]) -> set[str]:
+    """Every bare name this function might invoke: called names,
+    bare-name references (callbacks handed to executors), attribute
+    reads through ``self`` (method callbacks like ``self._chunk``), and
+    attribute reads matching a known ``@property`` (those run code).
+    Field reads on *other* objects — ``chunk.start`` — must not edge to
+    same-named methods; that chain once pulled the whole legacy decode
+    path into the fused root's reachable set."""
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            tail = None
+            if isinstance(node.func, ast.Attribute):
+                tail = node.func.attr
+            elif isinstance(node.func, ast.Name):
+                tail = node.func.id
+            if tail:
+                out.add(tail)
+        elif isinstance(node, ast.Attribute) and isinstance(node.ctx,
+                                                            ast.Load):
+            is_self = (isinstance(node.value, ast.Name)
+                       and node.value.id == "self")
+            if node.attr in properties or is_self:
+                out.add(node.attr)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            out.add(node.id)
+    return out
+
+
+def reachable(group: list[SourceFile], config: LintConfig
+              ) -> Iterator[tuple[SourceFile, str, ast.AST, str]]:
+    """(file, qualname, node, root-label) for every function reachable
+    from the group's hot roots."""
+    defs: dict[str, list] = collections.defaultdict(list)
+    properties: set[str] = set()
+    all_fns = []
+    for sf in group:
+        for qual, fn in functions(sf.tree):
+            defs[fn.name].append((sf, qual, fn))
+            all_fns.append((sf, qual, fn))
+            if _is_property(fn):
+                properties.add(fn.name)
+
+    queue: collections.deque = collections.deque()
+    for sf, qual, fn in all_fns:
+        if fn.name in config.hot_roots:
+            queue.append((sf, qual, fn, qual))
+        elif sf.module in config.hot_modules:
+            queue.append((sf, qual, fn, f"{sf.module} (hot module)"))
+
+    seen: dict[int, tuple] = {}
+    while queue:
+        sf, qual, fn, root = queue.popleft()
+        if id(fn) in seen:
+            continue
+        seen[id(fn)] = (sf, qual, fn, root)
+        for name in _refs(fn, properties):
+            for entry in defs.get(name, ()):
+                if id(entry[2]) not in seen:
+                    queue.append((*entry, root))
+    yield from seen.values()

@@ -1,0 +1,180 @@
+"""Lint driver: file loading, suppressions, rule dispatch, reporting.
+
+Kept deliberately dependency-free (``ast`` + stdlib only): the linter
+must run in CI before jax imports — and on any tree, including one
+broken enough that importing ``repro`` would fail.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Iterable, Mapping
+
+# ``# repro-lint: disable=RL001`` or ``disable=RL001,RL004`` anywhere on
+# the offending line suppresses those codes for that line only.
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+)")
+
+SEVERITIES: Mapping[str, str] = {
+    "RL000": "error",    # file does not parse
+    "RL001": "error",
+    "RL002": "error",
+    "RL003": "error",
+    "RL004": "error",
+    "RL005": "error",
+    "RL006": "error",
+}
+
+RULE_CODES = tuple(c for c in SEVERITIES if c != "RL000")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint hit, addressed like a compiler diagnostic."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    @property
+    def severity(self) -> str:
+        return SEVERITIES.get(self.code, "error")
+
+
+def format_finding(f: Finding) -> str:
+    return f"{f.path}:{f.line}:{f.col}: {f.code} [{f.severity}] {f.message}"
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """What the rules consider hot / donating for *this* repo.
+
+    The defaults encode the serving stack's layout: the hot-path roots
+    are the fused tick, the decode-loop module, and the front end's
+    token pump; ``donating_factories`` names the call surfaces that
+    return donated-argument jits (``make_fused_decode_step`` and the
+    scheduler's ``_fused_step`` accessor both donate the cache pool at
+    positional index 1).  Tests override these to lint micro-fixtures.
+    """
+
+    select: frozenset[str] | None = None      # None = all rules
+    hot_roots: tuple[str, ...] = ("_tick_fused", "_pump")
+    hot_modules: tuple[str, ...] = ("decode_loop",)
+    hot_dirs: tuple[str, ...] = ("serve",)
+    donating_factories: Mapping[str, tuple[int, ...]] = \
+        dataclasses.field(default_factory=lambda: {
+            "make_fused_decode_step": (1,),
+            "_fused_step": (1,),
+        })
+
+    def wants(self, code: str) -> bool:
+        return self.select is None or code in self.select
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """A parsed module plus its per-line suppression table."""
+
+    path: str
+    text: str
+    tree: ast.Module | None
+    suppressed: dict[int, set[str]]
+    parse_error: Finding | None = None
+
+    @property
+    def module(self) -> str:
+        return pathlib.Path(self.path).stem
+
+
+def _suppressions(text: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[i] = {c.strip() for c in m.group(1).split(",") if c.strip()}
+    return out
+
+
+def load_file(path: str | pathlib.Path) -> SourceFile:
+    p = str(path)
+    text = pathlib.Path(p).read_text()
+    try:
+        tree = ast.parse(text, filename=p)
+        err = None
+    except SyntaxError as e:
+        tree = None
+        err = Finding(p, e.lineno or 1, e.offset or 0, "RL000",
+                      f"file does not parse: {e.msg}")
+    return SourceFile(path=p, text=text, tree=tree,
+                      suppressed=_suppressions(text), parse_error=err)
+
+
+def collect_files(paths: Iterable[str | pathlib.Path]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    # de-dup while keeping order (a file named twice lints once)
+    seen: set[str] = set()
+    uniq = []
+    for p in out:
+        if str(p) not in seen:
+            seen.add(str(p))
+            uniq.append(p)
+    return uniq
+
+
+def lint_sources(files: list[SourceFile],
+                 config: LintConfig | None = None
+                 ) -> tuple[list[Finding], int]:
+    """Run every selected rule over ``files``.
+
+    Returns ``(findings, n_suppressed)`` with findings sorted by
+    location and de-duplicated (the RL002 graph walk can reach one
+    function through several roots).
+    """
+    from . import rules
+
+    config = config or LintConfig()
+    raw: list[Finding] = []
+    for sf in files:
+        if sf.parse_error is not None:
+            raw.append(sf.parse_error)
+            continue
+        for code, rule in rules.PER_FILE_RULES:
+            if config.wants(code):
+                raw.extend(rule(sf, config))
+    parsed = [sf for sf in files if sf.tree is not None]
+    for code, rule in rules.PROJECT_RULES:
+        if config.wants(code):
+            raw.extend(rule(parsed, config))
+
+    by_file = {sf.path: sf for sf in files}
+    findings: list[Finding] = []
+    n_suppressed = 0
+    seen: set[tuple] = set()
+    for f in raw:
+        key = (f.path, f.line, f.col, f.code)
+        if key in seen:
+            continue
+        seen.add(key)
+        sf = by_file.get(f.path)
+        if sf is not None and f.code in sf.suppressed.get(f.line, ()):
+            n_suppressed += 1
+            continue
+        findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings, n_suppressed
+
+
+def lint_paths(paths: Iterable[str | pathlib.Path],
+               config: LintConfig | None = None
+               ) -> tuple[list[Finding], int]:
+    files = [load_file(p) for p in collect_files(paths)]
+    return lint_sources(files, config)

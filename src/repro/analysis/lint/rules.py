@@ -1,0 +1,503 @@
+"""The RL001-RL006 rule implementations.
+
+Everything here is deliberately *flow-insensitive*: rules reason about
+names and line order inside one scope (plus, for RL002, a conservative
+name-matched call graph across the serve package).  That misses nothing
+the repo actually does — the hazards these rules police are structural
+("a donated name is read again", "a jit is built per loop iteration"),
+not data-flow subtleties — and it keeps every rule auditable in one
+screen of code.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .engine import Finding, LintConfig, SourceFile
+
+# --------------------------------------------------------------------- utils
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def import_map(tree: ast.Module) -> dict[str, str]:
+    """Local alias -> canonical dotted module/name (``jnp`` ->
+    ``jax.numpy``, ``jit`` -> ``jax.jit``)."""
+    m: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    m[a.asname] = a.name
+                else:
+                    root = a.name.split(".")[0]
+                    m[root] = root
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                m[a.asname or a.name] = f"{node.module}.{a.name}"
+    return m
+
+
+def resolve(name: str | None, imports: dict[str, str]) -> str | None:
+    """Canonicalise a dotted name through the module's import aliases."""
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    full = imports.get(head)
+    if full is None:
+        return name
+    return f"{full}.{rest}" if rest else full
+
+
+def functions(tree: ast.Module) -> Iterator[tuple[str, ast.AST]]:
+    """Every (qualname, node) function/method in the module, including
+    nested ones (qualified ``Class.method`` / ``outer.inner``)."""
+
+    def walk(node: ast.AST, prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                yield qual, child
+                yield from walk(child, qual)
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name)
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def _const_positions(node: ast.expr | None) -> tuple[int, ...]:
+    """donate_argnums value -> positional indices (int or tuple of ints)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+# --------------------------------------------------- RL001 use-after-donation
+
+_JIT_NAMES = ("jax.jit", "jax.pmap")
+
+
+def _donate_positions_of_expr(value: ast.expr, imports: dict[str, str],
+                              config: LintConfig) -> tuple[int, ...]:
+    """Donated positions if ``value`` evaluates to a donating callable."""
+    if not isinstance(value, ast.Call):
+        return ()
+    fname = resolve(dotted(value.func), imports)
+    if fname in _JIT_NAMES:
+        for kw in value.keywords:
+            if kw.arg == "donate_argnums":
+                return _const_positions(kw.value)
+        return ()
+    tail = (dotted(value.func) or "").rsplit(".", 1)[-1]
+    return tuple(config.donating_factories.get(tail, ()))
+
+
+def check_use_after_donation(sf: SourceFile,
+                             config: LintConfig) -> Iterator[Finding]:
+    """RL001: a name passed at a donated position of a donating jit is
+    read again in the same scope before being rebound (or handed off via
+    the ``pool.adopt()`` pattern, which rebinds ``<pool>.caches``)."""
+    tree = sf.tree
+    imports = import_map(tree)
+    donors: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = dotted(node.targets[0])
+            if tgt:
+                pos = _donate_positions_of_expr(node.value, imports, config)
+                if pos:
+                    donors[tgt] = pos
+
+    def call_positions(call: ast.Call) -> tuple[int, ...]:
+        name = dotted(call.func)
+        if name is not None:
+            if name in donors:
+                return donors[name]
+            tail = name.rsplit(".", 1)[-1]
+            if tail in config.donating_factories:
+                return tuple(config.donating_factories[tail])
+        # immediate application: jax.jit(f, donate_argnums=..)(args) or
+        # self._fused_step()(args)
+        if isinstance(call.func, ast.Call):
+            return _donate_positions_of_expr(call.func, imports, config)
+        return ()
+
+    for qual, fn in functions(tree):
+        donations = []      # (line, donated dotted name, callee repr)
+        loads = []          # (line, col, dotted name)
+        stores = []         # (line, dotted name)
+        kills = []          # (line, dotted name) from <p>.adopt(...)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = dotted(node.func) or "<call>"
+                if name.endswith(".adopt"):
+                    kills.append((node.lineno,
+                                  name[:-len(".adopt")] + ".caches"))
+                # The donation takes effect when the call completes, so
+                # a multi-line call's own argument lines never read a
+                # donated value: compare against the call's last line.
+                end = node.end_lineno or node.lineno
+                for pos in call_positions(node):
+                    if pos < len(node.args):
+                        arg = dotted(node.args[pos])
+                        if arg:
+                            donations.append((end, arg, name))
+            elif isinstance(node, (ast.Name, ast.Attribute)):
+                name = dotted(node)
+                if name is None:
+                    continue
+                if isinstance(node.ctx, ast.Store):
+                    stores.append((node.lineno, name))
+                elif isinstance(node.ctx, ast.Load):
+                    loads.append((node.lineno, node.col_offset, name))
+
+        for dline, dname, callee in donations:
+            rebinds = [line for line, s in stores + kills
+                       if line >= dline and (s == dname
+                                             or dname.startswith(s + "."))]
+            for line, col, lname in loads:
+                if line <= dline:
+                    continue
+                if lname != dname and not lname.startswith(dname + "."):
+                    continue
+                if any(dline <= r <= line for r in rebinds):
+                    continue
+                yield Finding(
+                    sf.path, line, col, "RL001",
+                    f"use-after-donation: '{lname}' is read after being "
+                    f"donated to '{callee}' at line {dline} (in '{qual}'); "
+                    f"rebind the donated output (adopt()) before reading")
+
+
+# ------------------------------------------------ RL002 hot-path host syncs
+
+_SYNC_CALLS = {
+    "jax.device_get": "jax.device_get (device->host transfer)",
+    "jax.block_until_ready": "jax.block_until_ready (device sync)",
+    "numpy.asarray": "np.asarray (device->host copy when given a jax "
+                     "array)",
+    "numpy.array": "np.array (device->host copy when given a jax array)",
+}
+_SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _is_shape_like(arg: ast.expr) -> bool:
+    """int()/float() over .shape/.ndim/len() is host metadata, not a
+    device sync."""
+    for node in ast.walk(arg):
+        if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "len":
+            return True
+    return False
+
+
+def _sync_findings(sf: SourceFile, fn: ast.AST, qual: str, root: str,
+                   imports: dict[str, str]) -> Iterator[Finding]:
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = resolve(dotted(node.func), imports)
+        desc = None
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args:
+            desc = ".item() (device->host scalar sync)"
+        elif fname in _SYNC_CALLS:
+            desc = _SYNC_CALLS[fname]
+        elif isinstance(node.func, ast.Name) \
+                and node.func.id in ("float", "int", "bool") \
+                and len(node.args) == 1 \
+                and isinstance(node.args[0], (ast.Call, ast.Subscript)) \
+                and not _is_shape_like(node.args[0]):
+            desc = (f"{node.func.id}() on a (possibly device) value "
+                    f"(implicit device->host sync)")
+        if desc:
+            yield Finding(
+                sf.path, node.lineno, node.col_offset, "RL002",
+                f"implicit host sync on the serve hot path: {desc} in "
+                f"'{qual}', reachable from '{root}'")
+
+
+def check_host_sync(files: list[SourceFile],
+                    config: LintConfig) -> Iterator[Finding]:
+    """RL002: host syncs inside functions reachable from the hot-path
+    roots, via the conservative call graph in callgraph.py."""
+    from .callgraph import hot_groups, reachable
+
+    for group in hot_groups(files, config):
+        for sf, qual, fn, root in reachable(group, config):
+            yield from _sync_findings(sf, fn, qual, root,
+                                      import_map(sf.tree))
+
+
+# ------------------------------------------------- RL003 recompile hazards
+
+_COMPILE_CALLS = ("jax.jit", "jax.pmap")
+
+
+def check_recompile_in_loop(sf: SourceFile,
+                            config: LintConfig) -> Iterator[Finding]:
+    """RL003: ``jax.jit``/``jax.pmap`` constructed inside a loop body
+    (or comprehension) pays a fresh trace+compile per iteration — the
+    PR-5 eager-scatter incident cost 181ms of XLA time on the first
+    serve tick for exactly this class of mistake."""
+    imports = import_map(sf.tree)
+    findings: list[Finding] = []
+
+    class V(ast.NodeVisitor):
+        depth = 0
+
+        def _loop(self, node):
+            self.depth += 1
+            self.generic_visit(node)
+            self.depth -= 1
+
+        visit_For = visit_While = visit_AsyncFor = _loop
+        visit_ListComp = visit_SetComp = visit_DictComp = _loop
+        visit_GeneratorExp = _loop
+
+        def visit_Call(self, node: ast.Call):
+            fname = resolve(dotted(node.func), imports)
+            if self.depth > 0 and fname in _COMPILE_CALLS:
+                findings.append(Finding(
+                    sf.path, node.lineno, node.col_offset, "RL003",
+                    f"recompile hazard: {fname} constructed inside a "
+                    f"loop body compiles on every iteration; hoist it "
+                    f"(or cache per compiled shape) outside the loop"))
+            self.generic_visit(node)
+
+    V().visit(sf.tree)
+    yield from findings
+
+
+# ----------------------------------------------------- RL004 tracer leaks
+
+_TRACE_ENTRY = (
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.fori_loop",
+    "jax.lax.while_loop", "jax.lax.scan", "jax.lax.cond", "jax.lax.switch",
+    "jax.lax.map",
+)
+
+
+def _traced_function_names(tree: ast.Module,
+                           imports: dict[str, str]) -> set[str]:
+    traced: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fname = resolve(dotted(node.func), imports)
+            if fname in _TRACE_ENTRY:
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        traced.add(arg.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                dname = resolve(dotted(dec), imports)
+                if dname in _TRACE_ENTRY:
+                    traced.add(node.name)
+                elif isinstance(dec, ast.Call):
+                    if resolve(dotted(dec.func), imports) in _TRACE_ENTRY:
+                        traced.add(node.name)
+                    else:   # functools.partial(jax.jit, ...)
+                        for a in dec.args:
+                            if resolve(dotted(a), imports) in _TRACE_ENTRY:
+                                traced.add(node.name)
+    return traced
+
+
+def check_tracer_leak(sf: SourceFile,
+                      config: LintConfig) -> Iterator[Finding]:
+    """RL004: a store to ``self.*`` or a ``global`` from inside a
+    function that jax traces (jitted, or a fori_loop/scan/while body):
+    the traced value outlives the trace as a leaked tracer, and the
+    side effect silently does not happen per step once compiled."""
+    imports = import_map(sf.tree)
+    traced = _traced_function_names(sf.tree, imports)
+    if not traced:
+        return
+    for qual, fn in functions(sf.tree):
+        parts = qual.split(".")
+        if not any(p in traced for p in parts):
+            continue
+        globals_decl = {n for node in ast.walk(fn)
+                        if isinstance(node, ast.Global)
+                        for n in node.names}
+        for node in ast.walk(fn):
+            targets: list[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for tgt in targets:
+                name = dotted(tgt)
+                if name is None:
+                    continue
+                if name.startswith("self."):
+                    yield Finding(
+                        sf.path, tgt.lineno, tgt.col_offset, "RL004",
+                        f"tracer leak: assignment to '{name}' inside "
+                        f"traced function '{qual}' — the traced value "
+                        f"escapes the trace and the store will not "
+                        f"re-run per compiled step")
+                elif name in globals_decl:
+                    yield Finding(
+                        sf.path, tgt.lineno, tgt.col_offset, "RL004",
+                        f"tracer leak: assignment to module-level "
+                        f"'{name}' inside traced function '{qual}'")
+
+
+# ------------------------------------------- RL005 blocking calls in async
+
+_ASYNC_BLOCKING = {
+    "time.sleep": "time.sleep blocks the event loop; use "
+                  "'await asyncio.sleep'",
+    "jax.device_get": "synchronous device->host transfer blocks the "
+                      "event loop; drain off-loop or bound it",
+    "jax.block_until_ready": "synchronous device wait blocks the event "
+                             "loop",
+}
+
+
+def _sync_queue_names(tree: ast.Module, imports: dict[str, str]) -> set[str]:
+    """Names bound to synchronous ``queue.Queue``-family objects."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.value, ast.Call):
+            vname = resolve(dotted(node.value.func), imports)
+            if vname in ("queue.Queue", "queue.LifoQueue",
+                         "queue.PriorityQueue", "queue.SimpleQueue"):
+                tgt = dotted(node.targets[0])
+                if tgt:
+                    out.add(tgt)
+    return out
+
+
+def check_async_blocking(sf: SourceFile,
+                         config: LintConfig) -> Iterator[Finding]:
+    """RL005: blocking calls inside ``async def`` — the serve loop runs
+    on the event loop, and one blocking call stalls every concurrent
+    stream (ticks, submissions, cancellations)."""
+    imports = import_map(sf.tree)
+    queues = _sync_queue_names(sf.tree, imports)
+    for qual, fn in functions(sf.tree):
+        if not isinstance(fn, ast.AsyncFunctionDef):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = resolve(dotted(node.func), imports)
+            if fname in _ASYNC_BLOCKING:
+                yield Finding(
+                    sf.path, node.lineno, node.col_offset, "RL005",
+                    f"blocking call in async function '{qual}': "
+                    f"{_ASYNC_BLOCKING[fname]}")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "get" \
+                    and dotted(node.func.value) in queues \
+                    and not any(kw.arg == "timeout"
+                                for kw in node.keywords) \
+                    and not node.args:
+                yield Finding(
+                    sf.path, node.lineno, node.col_offset, "RL005",
+                    f"blocking call in async function '{qual}': "
+                    f"unbounded queue.Queue.get() parks the event loop "
+                    f"forever; use asyncio.Queue or a timeout")
+
+
+# --------------------------------------- RL006 decision-key instability
+
+_UNHASHABLE = (ast.Dict, ast.Set, ast.List, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
+
+
+def _contains_id_call(node: ast.AST) -> ast.Call | None:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) \
+                and n.func.id == "id" and len(n.args) == 1:
+            return n
+    return None
+
+
+def check_decision_key_stability(sf: SourceFile,
+                                 config: LintConfig) -> Iterator[Finding]:
+    """RL006: ``id()``-derived or unhashable components flowing into a
+    ``DecisionKey``.  ``id()`` is process-lifetime identity — a key
+    built from it changes every restart, so persisted calibrations can
+    never be found again (the PR-2 stable-t0-key fix, made a rule)."""
+    for qual, fn in list(functions(sf.tree)) + [("<module>", sf.tree)]:
+        tainted: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) \
+                    and _contains_id_call(node.value) is not None:
+                for tgt in node.targets:
+                    name = dotted(tgt)
+                    if name:
+                        tainted.add(name)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func) or ""
+            if name.rsplit(".", 1)[-1] != "DecisionKey":
+                continue
+            parts = list(node.args) + [kw.value for kw in node.keywords]
+            for part in parts:
+                if _contains_id_call(part) is not None:
+                    yield Finding(
+                        sf.path, part.lineno, part.col_offset, "RL006",
+                        f"decision-key instability: id()-derived "
+                        f"component in DecisionKey (in '{qual}') — "
+                        f"process identity is not a stable cache key")
+                    continue
+                hit = next((n for n in ast.walk(part)
+                            if isinstance(n, _UNHASHABLE)), None)
+                if hit is not None:
+                    yield Finding(
+                        sf.path, part.lineno, part.col_offset, "RL006",
+                        f"decision-key instability: unhashable "
+                        f"{type(hit).__name__.lower()} component in "
+                        f"DecisionKey (in '{qual}') — cache keys must "
+                        f"be hashable and stable across runs")
+                    continue
+                for n in ast.walk(part):
+                    if isinstance(n, ast.Name) and n.id in tainted \
+                            and isinstance(n.ctx, ast.Load):
+                        yield Finding(
+                            sf.path, n.lineno, n.col_offset, "RL006",
+                            f"decision-key instability: '{n.id}' is "
+                            f"id()-derived and flows into DecisionKey "
+                            f"(in '{qual}')")
+                        break
+
+
+# ------------------------------------------------------------- registry
+
+PER_FILE_RULES = (
+    ("RL001", check_use_after_donation),
+    ("RL003", check_recompile_in_loop),
+    ("RL004", check_tracer_leak),
+    ("RL005", check_async_blocking),
+    ("RL006", check_decision_key_stability),
+)
+
+PROJECT_RULES = (
+    ("RL002", check_host_sync),
+)

@@ -676,7 +676,7 @@ class ExecutionModel:
         winner, seconds, timings = search.search(candidates, run, repeats)
         with self._lock:
             self.searches += 1
-        record = {f: int(v) for f, v in zip(fields, winner)}
+        record = {f: int(v) for f, v in zip(fields, winner, strict=True)}
         record.update(hw=dkey.hardware or self.hardware, seconds=seconds,
                       candidates=len(candidates))
         self.cache.set_tuned(k, record)

@@ -63,7 +63,7 @@ class SimMachine:
         noise = (1.0 + self.jitter * np.abs(rng.standard_normal(len(chunks)))
                  if self.jitter > 0 else np.ones(len(chunks)))
         durations = [self.t_task + c.size * t_iter * float(n)
-                     for c, n in zip(chunks, noise)]
+                     for c, n in zip(chunks, noise, strict=True)]
         # Greedy earliest-finish placement (work-stealing model).
         heap = [0.0] * min(n_cores, len(chunks))
         heapq.heapify(heap)

@@ -1,0 +1,75 @@
+"""Strict runtime mode: turn latent hot-path hazards into hard errors.
+
+The static pass (``repro.analysis.lint``) catches donation and host-sync
+hazards it can see in source; this module catches the ones it can't —
+at runtime, where they actually bite.  Two enforcers:
+
+* **Poison-on-donate**: ``SlotKVCachePool`` marks its cache tree as
+  donated the moment it is handed to a donating dispatch.  Until
+  ``adopt()`` rebinds the pool, any read of ``pool.caches`` raises
+  ``DonatedCacheError`` instead of returning arrays whose device
+  buffers XLA has already aliased away (reading those produces either a
+  deleted-buffer crash deep in jaxlib or — worse — silently stale
+  rows, which is exactly the failure mode rule RL001 exists for).
+
+* **Transfer guard**: ``hot_dispatch_guard()`` arms
+  ``jax.transfer_guard_device_to_host("disallow")`` around the serve
+  tick and the training step, so any *implicit* device→host transfer
+  (``float(arr)``, ``np.asarray(arr)``, printing a device array) fails
+  loudly.  Explicit ``jax.device_get`` stays permitted — the drain's
+  one sanctioned round-trip per dispatch still works; only accidental
+  syncs trip the guard.  Caveat: on the CPU backend device→host reads
+  are zero-copy and the guard never fires, so this enforcer only bites
+  on real accelerators; the poison proxy above is active everywhere,
+  which is why the test suite leans on it.
+
+Enablement: set ``REPRO_STRICT=1`` in the environment (the test suite
+does, via ``tests/conftest.py``), or call :func:`enable` (what the
+``--strict`` flag on ``launch/serve`` and ``launch/train`` does).  When
+disabled, every hook here is a no-op and the hot path pays nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+_FORCED = False
+
+
+class DonatedCacheError(RuntimeError):
+    """A donated cache tree was read before ``adopt()`` rebound it."""
+
+    def __init__(self, consumer: str):
+        self.consumer = consumer
+        super().__init__(
+            f"pool.caches was donated to {consumer!r} and not yet "
+            f"re-adopted — its device buffers are aliased into the "
+            f"dispatch's outputs and must not be read (RL001)")
+
+
+def enabled() -> bool:
+    """Strict mode is on via ``REPRO_STRICT=1`` or :func:`enable`."""
+    return _FORCED or os.environ.get("REPRO_STRICT", "") == "1"
+
+
+def enable() -> None:
+    """Force strict mode on for this process (the ``--strict`` flag)."""
+    global _FORCED
+    _FORCED = True
+
+
+@contextlib.contextmanager
+def hot_dispatch_guard():
+    """Disallow implicit device→host transfers inside the block.
+
+    Wraps the serve scheduler's ``tick()`` and the fault-tolerant
+    trainer's step call.  A no-op unless strict mode is enabled, so the
+    guard costs nothing in production profiles.
+    """
+    if not enabled():
+        yield
+        return
+    import jax
+
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield

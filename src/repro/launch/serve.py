@@ -27,6 +27,7 @@ import jax
 from ..configs import ARCH_NAMES, get_config
 from ..core.acc import AdaptiveCoreChunk
 from ..core.adaptive import adaptive
+from ..core import strict
 from ..core.calibration import CalibrationCache
 from ..core.executor import SequentialExecutor
 from ..data import make_batch
@@ -177,11 +178,18 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="--frontend trace seed (arrivals, lengths, "
                          "prompt tokens)")
+    ap.add_argument("--strict", action="store_true",
+                    help="strict runtime mode (same guards as "
+                         "REPRO_STRICT=1): donated cache pools poison "
+                         "on read-after-donation and the serve tick "
+                         "disallows implicit device->host transfers")
     ap.add_argument("--print-launch-profile", action="store_true",
                     help="print the recommended serving environment "
                          "(shell-sourceable) and exit")
     args = ap.parse_args()
 
+    if args.strict:
+        strict.enable()
     if args.print_launch_profile:
         print_launch_profile()
         return

@@ -58,7 +58,7 @@ def _fit(shape: tuple[int, ...], trailing: tuple, axis_sizes: dict) -> P:
     """Pad the trailing spec to ndim and drop non-dividing axes."""
     spec: list = [None] * (len(shape) - len(trailing)) + list(trailing)
     out = []
-    for dim, ax in zip(shape, spec):
+    for dim, ax in zip(shape, spec, strict=True):
         if ax is None:
             out.append(None)
             continue
@@ -83,7 +83,7 @@ _MOE_FF2D_RULES: list[tuple[str, tuple]] = [
 def _fit2(shape, trailing, axis_sizes):
     out = []
     spec = [None] * (len(shape) - len(trailing)) + list(trailing)
-    for dim, ax in zip(shape, spec):
+    for dim, ax in zip(shape, spec, strict=True):
         if ax is None:
             out.append(None)
         elif isinstance(ax, tuple):

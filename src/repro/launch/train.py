@@ -17,6 +17,7 @@ import time
 import jax
 
 from ..configs import ARCH_NAMES, get_config
+from ..core import strict
 from ..core.adaptive import adaptive
 from ..core.executor import MeshExecutor
 from ..data import make_batch
@@ -54,8 +55,14 @@ def main() -> None:
                     help="dump the ExecutionModel decision trace: the "
                          "train plan and kernel-block choices with the "
                          "policy and inputs that produced them")
+    ap.add_argument("--strict", action="store_true",
+                    help="strict runtime mode (same guards as "
+                         "REPRO_STRICT=1): the train step runs with "
+                         "implicit device->host transfers disallowed")
     args = ap.parse_args()
 
+    if args.strict:
+        strict.enable()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -77,7 +77,8 @@ def update(grads: Any, state: dict, params: Any, cfg: AdamWConfig,
     flat_master = (jax.tree.leaves(state["master"])
                    if "master" in state else [None] * len(flat_p))
     out = [upd(p, g, m, v, mw) for p, g, m, v, mw in
-           zip(flat_p, flat_g, flat_m, flat_v, flat_master)]
+           zip(flat_p, flat_g, flat_m, flat_v, flat_master,
+               strict=True)]
     new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
     new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
     new_v = jax.tree.unflatten(tdef, [o[2] for o in out])

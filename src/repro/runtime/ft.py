@@ -16,6 +16,7 @@ import logging
 from typing import Any, Callable, Iterator
 
 from ..checkpoint import checkpointer
+from ..core import strict
 
 log = logging.getLogger("repro.ft")
 
@@ -52,8 +53,12 @@ class FaultTolerantTrainer:
             try:
                 if self.failure_hook is not None:
                     self.failure_hook(step)
-                params, opt_state, metrics = self.train_step(
-                    params, opt_state, batch)
+                # Strict mode disallows implicit host syncs inside the
+                # step itself; the metrics float() below runs outside
+                # the guard — logging is allowed to block, the step not.
+                with strict.hot_dispatch_guard():
+                    params, opt_state, metrics = self.train_step(
+                        params, opt_state, batch)
             except SimulatedFailure:
                 restarts += 1
                 if restarts > self.max_restarts:

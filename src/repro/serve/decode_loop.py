@@ -90,10 +90,22 @@ def masked_merge(caches, new_caches, active):
                         is_leaf=lambda x: x is None)
 
 
+def _replicated_like(shardings):
+    """Fully-replicated NamedShardings over the same mesh — the
+    deliberate mid-loop reshard target for the HLO-audit gate test."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.tree.map(
+        lambda s: None if s is None
+        else NamedSharding(s.mesh, PartitionSpec()),
+        shardings, is_leaf=lambda x: x is None)
+
+
 def make_fused_decode_step(cfg: ArchConfig, *, window: int | None = None,
                            kernel_tuner=None,
                            max_depth: int = DEFAULT_MAX_DEPTH,
-                           cache_shardings=None) -> Callable:
+                           cache_shardings=None,
+                           _inject_reshard: bool = False) -> Callable:
     """Build the jitted fused decode step.
 
     ``fused(params, caches, toks, poss, steps)`` advances lane ``i`` by
@@ -118,9 +130,17 @@ def make_fused_decode_step(cfg: ArchConfig, *, window: int | None = None,
     sharding constraint: the donated output must alias the sharded
     input buffers exactly, and the constraint stops GSPMD from electing
     to reshard the pool across the ``fori_loop`` carry.
+
+    ``_inject_reshard`` (tests/CI only) re-constrains the pool to fully
+    replicated *inside* the loop body — the exact mid-serve reshard the
+    constraint exists to prevent.  ``analysis/hlo_audit`` lowers a step
+    built this way to prove its gate fails when the hazard is real;
+    the scheduler never sets it.
     """
     lanes = make_lane_step(cfg, window=window, kernel_tuner=kernel_tuner)
     max_depth = max(int(max_depth), 1)
+    reshard_to = _replicated_like(cache_shardings) \
+        if _inject_reshard and cache_shardings is not None else None
 
     def fused(params, caches, toks, poss, steps):
         if cache_shardings is not None:
@@ -131,6 +151,9 @@ def make_fused_decode_step(cfg: ArchConfig, *, window: int | None = None,
 
         def body(j, carry):
             caches, toks, poss, rem, out_buf = carry
+            if reshard_to is not None:
+                caches = jax.lax.with_sharding_constraint(caches,
+                                                          reshard_to)
             active = rem > 0
             next_toks, new_caches = lanes(params, caches, toks, poss)
             caches = masked_merge(caches, new_caches, active)

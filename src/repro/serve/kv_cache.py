@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core import strict
 from ..models import lm
 
 
@@ -80,6 +81,7 @@ class SlotKVCachePool:
                  window: int | None = None, dtype=None, mesh=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self._donated_to: str | None = None
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
@@ -105,6 +107,30 @@ class SlotKVCachePool:
         self.positions = [0] * n_slots  # tokens cached per slot (host side)
         self.owner: list[Any] = [None] * n_slots
         self._write_jit = None
+
+    # -- donation poison (strict mode) ---------------------------------------
+    @property
+    def caches(self):
+        """The per-layer cache pytree.  Under strict mode
+        (``core.strict``), reading this between a donating dispatch
+        (``mark_donated``) and the matching ``adopt()`` raises
+        ``DonatedCacheError``: the arrays' device buffers are already
+        aliased into the dispatch's outputs."""
+        if self._donated_to is not None and strict.enabled():
+            raise strict.DonatedCacheError(self._donated_to)
+        return self._caches
+
+    @caches.setter
+    def caches(self, tree) -> None:
+        self._caches = tree
+        self._donated_to = None
+
+    def mark_donated(self, consumer: str) -> None:
+        """Poison ``caches`` until the next rebind (``adopt()`` or a
+        direct assignment).  The scheduler calls this immediately after
+        handing the pool to a ``donate_argnums`` dispatch.  Costs one
+        string store; the read-side check only fires under strict mode."""
+        self._donated_to = consumer
 
     # -- free-list -----------------------------------------------------------
     def free_slots(self) -> int:
@@ -138,7 +164,8 @@ class SlotKVCachePool:
             return _tree_map(_maybe(lambda x: x.at[slot].set(0)), cache)
 
         self.caches = [zero_row(kind, c) for kind, c in
-                       zip(self.cfg.layer_kinds(), self.caches)]
+                       zip(self.cfg.layer_kinds(), self.caches,
+                           strict=True)]
 
     # -- slot I/O ------------------------------------------------------------
     def read_slot(self, slot: int):

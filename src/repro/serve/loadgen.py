@@ -55,7 +55,7 @@ class TraceRequest:
 def _finalize(arrivals, plens, news, slo: SLOModel | None
               ) -> list[TraceRequest]:
     out = []
-    for t, p, n in zip(arrivals, plens, news):
+    for t, p, n in zip(arrivals, plens, news, strict=True):
         p, n = int(max(p, 1)), int(max(n, 1))
         d = None if slo is None else float(t) + slo.deadline_offset(n)
         out.append(TraceRequest(float(t), p, n, d))

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..core import overhead_law
+from ..core import overhead_law, strict
 from ..core.acc import AdaptiveCoreChunk
 from ..core.executor import Chunk, SequentialExecutor
 from ..core.feedback import tag_workload
@@ -428,6 +428,7 @@ class ServeScheduler:
                 self.params, self.pool.caches, self._decode_toks(),
                 self.pool.positions_array(),
                 jnp.zeros(self.pool.n_slots, jnp.int32))
+            self.pool.mark_donated("fused decode warmup")
             jax.block_until_ready(out_buf)
             self.pool.adopt(new_caches)
             self._dev_toks = toks
@@ -466,21 +467,30 @@ class ServeScheduler:
         fused path amortises.  On fused decode-only ticks it is also
         folded into the calibration store (``serve_host_tick``), which
         is what drives the next ``serve_dispatch_depth`` decision.
+
+        Under strict mode (``core.strict``) the whole round runs with
+        implicit device→host transfers disallowed — the sanctioned
+        syncs all go through explicit ``device_get``/
+        ``block_until_ready``, so anything else that blocks here is a
+        bug the guard turns into a hard error.
         """
-        t_start = time.perf_counter()
-        self._blocked_s = 0.0
-        self._tick_misses = 0
-        was_warm = self._warm_fused
-        rec = self._tick_fused() if self._fused else self._tick_legacy()
-        host_s = max(time.perf_counter() - t_start - self._blocked_s, 0.0)
-        self.host_overhead_s += host_s
-        if self._fused and was_warm and rec.decoded and not rec.prefill_ops:
-            # Clean sample: no prefill compute and no cold compiles in
-            # the window, so host_s is pure scheduling overhead.
-            model = self.decision_model()
-            if model is not None:
-                model.observe(self.host_tick_key, 1, host_s)
-        return rec
+        with strict.hot_dispatch_guard():
+            t_start = time.perf_counter()
+            self._blocked_s = 0.0
+            self._tick_misses = 0
+            was_warm = self._warm_fused
+            rec = self._tick_fused() if self._fused else self._tick_legacy()
+            host_s = max(
+                time.perf_counter() - t_start - self._blocked_s, 0.0)
+            self.host_overhead_s += host_s
+            if self._fused and was_warm and rec.decoded \
+                    and not rec.prefill_ops:
+                # Clean sample: no prefill compute and no cold compiles
+                # in the window, so host_s is pure scheduling overhead.
+                model = self.decision_model()
+                if model is not None:
+                    model.observe(self.host_tick_key, 1, host_s)
+            return rec
 
     def _tick_legacy(self) -> TickRecord:
         """Per-tick decode: one device round-trip per decoded token."""
@@ -772,9 +782,10 @@ class ServeScheduler:
             # Synchronise inside the thunk: the executor times this call
             # for the feedback loop, and an async jit dispatch would
             # record microseconds of launch cost as the chunk's t_iter.
-            return jax.block_until_ready(self._prefill_step(padded)(
-                params, row, piece[None], jnp.int32(req.prefilled),
-                jnp.int32(step - 1)))
+            return jax.block_until_ready(  # repro-lint: disable=RL002
+                self._prefill_step(padded)(
+                    params, row, piece[None], jnp.int32(req.prefilled),
+                    jnp.int32(step - 1)))
 
         # Feedback only sees warm shapes: a tick whose ops include a
         # never-executed chunk width runs untimed (it compiles).
@@ -791,13 +802,18 @@ class ServeScheduler:
         # Cache writes and state transitions happen on the caller's
         # thread, after the join — chunk thunks never mutate the pool.
         prefill_ops, finished = [], []
-        for (req, step, _), (logits, new_row) in zip(ops, outs):
+        for (req, step, _), (logits, new_row) in zip(ops, outs,
+                                                     strict=True):
             self.pool.write_slot(req.slot, new_row)
             req.prefilled += step
             self.pool.positions[req.slot] = req.prefilled
             prefill_ops.append((req.rid, step))
             if req.remaining_prefill == 0:
-                tok = int(jnp.argmax(logits[0, 0]))
+                # First-token sync: the scheduler needs this token on the
+                # host to route the request into decode.  Explicit so the
+                # strict-mode transfer guard stays armed for the rest.
+                tok = int(jax.device_get(  # repro-lint: disable=RL002
+                    jnp.argmax(logits[0, 0])))
                 req.out.append(tok)
                 req.first_token_at = self.clock()
                 req.state = RequestState.DECODE
@@ -1006,9 +1022,12 @@ class ServeScheduler:
         t_dev = time.perf_counter()
         new_caches, out_buf, final_toks = fused(
             self.params, self.pool.caches, toks_a, poss_a, steps_a)
+        self.pool.mark_donated("fused decode dispatch")
         total = sum(take for _, _, take in lanes)
         if timed:
-            jax.block_until_ready(out_buf)
+            # The periodic honest-timing sync (one per ``sync_every``
+            # dispatches) — budgeted by design, see class docstring.
+            jax.block_until_ready(out_buf)  # repro-lint: disable=RL002
             dt = time.perf_counter() - t_dev
             self._blocked_s += dt
             self.host_roundtrips += 1
@@ -1054,7 +1073,8 @@ class ServeScheduler:
                     break
             out_buf, lanes = self._inflight.popleft()
             t_dev = time.perf_counter()
-            toks = jax.device_get(out_buf)
+            # The fused path's one sanctioned round-trip (docstring above).
+            toks = jax.device_get(out_buf)  # repro-lint: disable=RL002
             if must:
                 self._blocked_s += time.perf_counter() - t_dev
             self.host_roundtrips += 1
@@ -1065,7 +1085,10 @@ class ServeScheduler:
                     # drained (the slot bookkeeping must balance) but
                     # the tokens are dropped, never emitted.
                     continue
-                req.out.extend(int(toks[j, slot]) for j in range(take))
+                req.out.extend(
+                    # ``toks`` is host numpy already — not a device sync.
+                    int(toks[j, slot])  # repro-lint: disable=RL002
+                    for j in range(take))
                 if req.state is RequestState.DONE \
                         and req.pending_out <= 0 \
                         and req.finished_at is None:

@@ -91,7 +91,7 @@ def make_compressed_dp_train_step(cfg: ArchConfig,
             return mean.reshape(g.shape), ef_new
 
         flat, tdef = jax.tree.flatten(grads)
-        synced, ef_new = zip(*(sync_leaf(g) for g in flat))
+        synced, ef_new = zip(*(sync_leaf(g) for g in flat), strict=True)
         g_sync = jax.tree.unflatten(tdef, list(synced))
         ef_new = jax.tree.unflatten(tdef, list(ef_new))
         new_params, new_state, metrics = adamw.update(

@@ -8,6 +8,12 @@ import pytest
 # forces 512. Keep any inherited flag out.
 os.environ.pop("XLA_FLAGS", None)
 
+# The whole suite runs under strict mode: donated cache pools poison on
+# read-after-donation and the serve tick / train step disallow implicit
+# device->host transfers (see src/repro/core/strict.py).  setdefault so
+# REPRO_STRICT=0 can still switch it off for a local bisect.
+os.environ.setdefault("REPRO_STRICT", "1")
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 sys.path.insert(0, SRC)

@@ -310,13 +310,15 @@ def test_adaptive_executor_runs_every_algorithm_same_decisions(host):
             assert log_explicit == log_adaptive, name
         for r, o in zip(
                 ref if isinstance(ref, tuple) else (ref,),
-                out_a if isinstance(out_a, tuple) else (out_a,)):
+                out_a if isinstance(out_a, tuple) else (out_a,),
+                strict=True):
             np.testing.assert_allclose(np.asarray(o), np.asarray(r),
                                        rtol=2e-4, atol=1e-5,
                                        err_msg=name)
         for r, o in zip(
                 ref if isinstance(ref, tuple) else (ref,),
-                out_e if isinstance(out_e, tuple) else (out_e,)):
+                out_e if isinstance(out_e, tuple) else (out_e,),
+                strict=True):
             np.testing.assert_allclose(np.asarray(o), np.asarray(r),
                                        rtol=2e-4, atol=1e-5,
                                        err_msg=name)

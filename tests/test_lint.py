@@ -1,0 +1,437 @@
+"""repro-lint: golden positive/negative micro-fixtures for RL001-RL006,
+suppression round-trip, CLI exit codes, and the self-check that the
+shipped tree is clean under the shipped rule set."""
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import LintConfig, lint_paths, load_file
+from repro.analysis.lint.__main__ import main as lint_main
+from repro.analysis.lint.engine import lint_sources
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_lint(tmp_path, source, name="fixture.py", config=None):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    findings, suppressed = lint_sources([load_file(p)], config)
+    return [f.code for f in findings], findings, suppressed
+
+
+# --------------------------------------------------------------- RL001
+
+RL001_POS = """
+    import jax
+
+    def step(params, caches):
+        return caches
+
+    fused = jax.jit(step, donate_argnums=(1,))
+
+    def tick(params, caches):
+        new_caches = fused(params, caches)
+        return caches, new_caches
+"""
+
+RL001_NEG_REBIND = """
+    import jax
+
+    def step(params, caches):
+        return caches
+
+    fused = jax.jit(step, donate_argnums=(1,))
+
+    def tick(params, caches):
+        new_caches = fused(params, caches)
+        caches = new_caches
+        return caches, new_caches
+"""
+
+RL001_NEG_ADOPT = """
+    import jax
+
+    def step(params, caches):
+        return caches
+
+    fused = jax.jit(step, donate_argnums=(1,))
+
+    def tick(params, pool):
+        new_caches = fused(params, pool.caches)
+        pool.adopt(new_caches)
+        return pool.caches
+"""
+
+
+def test_rl001_use_after_donation(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, RL001_POS)
+    assert codes == ["RL001"]
+    assert "donated to 'fused'" in findings[0].message
+
+
+def test_rl001_rebind_kills(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL001_NEG_REBIND)
+    assert codes == []
+
+
+def test_rl001_adopt_handoff_kills(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL001_NEG_ADOPT)
+    assert codes == []
+
+
+def test_rl001_donating_factory(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, """
+        def build(self):
+            fused = self._fused_step()
+            out = fused(self.params, self.pool.caches)
+            bad = self.pool.caches
+            return out, bad
+    """)
+    assert codes == ["RL001"]
+    assert "self.pool.caches" in findings[0].message
+
+
+# --------------------------------------------------------------- RL002
+
+RL002_POS = """
+    import jax
+
+    class Sched:
+        def _tick_fused(self):
+            return self._harvest()
+
+        def _harvest(self):
+            return jax.device_get(self.buf)
+"""
+
+RL002_NEG_COLD_PATH = """
+    import jax
+
+    class Sched:
+        def _tick_fused(self):
+            return 0
+
+        def results(self):
+            return jax.device_get(self.buf)
+"""
+
+
+def test_rl002_sync_reachable_from_root(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, RL002_POS)
+    assert codes == ["RL002"]
+    assert "_harvest" in findings[0].message
+    assert "_tick_fused" in findings[0].message
+
+
+def test_rl002_sync_off_hot_path_ok(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL002_NEG_COLD_PATH)
+    assert codes == []
+
+
+def test_rl002_callback_and_property_edges(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, """
+        import jax
+
+        class Sched:
+            def _tick_fused(self):
+                self.executor.run(self._chunk)
+                return self.width
+
+            def _chunk(self):
+                return float(jax.numpy.sum(self.buf))
+
+            @property
+            def width(self):
+                return self.buf.item()
+    """)
+    assert sorted(codes) == ["RL002", "RL002"]
+    msgs = " ".join(f.message for f in findings)
+    assert "_chunk" in msgs and "width" in msgs
+
+
+def test_rl002_shape_metadata_not_a_sync(tmp_path):
+    codes, _, _ = run_lint(tmp_path, """
+        class Sched:
+            def _tick_fused(self):
+                return int(self.tokens.shape[0]) + int(len(self.out))
+    """)
+    assert codes == []
+
+
+# --------------------------------------------------------------- RL003
+
+RL003_POS = """
+    import jax
+
+    def run(fns, xs):
+        outs = []
+        for f in fns:
+            outs.append(jax.jit(f)(xs))
+        return outs
+"""
+
+RL003_NEG = """
+    import jax
+
+    def run(f, chunks):
+        step = jax.jit(f)
+        return [step(c) for c in chunks]
+"""
+
+
+def test_rl003_jit_in_loop(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL003_POS)
+    assert codes == ["RL003"]
+
+
+def test_rl003_hoisted_jit_ok(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL003_NEG)
+    assert codes == []
+
+
+def test_rl003_jit_in_comprehension(tmp_path):
+    codes, _, _ = run_lint(tmp_path, """
+        import jax
+
+        def run(fns, x):
+            return [jax.jit(f)(x) for f in fns]
+    """)
+    assert codes == ["RL003"]
+
+
+# --------------------------------------------------------------- RL004
+
+RL004_POS = """
+    import jax
+
+    class Loop:
+        def run(self, x):
+            def body(i, c):
+                self.last = c
+                return c + 1
+            return jax.lax.fori_loop(0, 4, body, x)
+"""
+
+RL004_NEG = """
+    import jax
+
+    class Loop:
+        def run(self, x):
+            def body(i, c):
+                nxt = c + 1
+                return nxt
+            out = jax.lax.fori_loop(0, 4, body, x)
+            self.last = out
+            return out
+"""
+
+
+def test_rl004_tracer_leak(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, RL004_POS)
+    assert codes == ["RL004"]
+    assert "self.last" in findings[0].message
+
+
+def test_rl004_host_side_store_ok(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL004_NEG)
+    assert codes == []
+
+
+def test_rl004_jitted_decorator_and_global(tmp_path):
+    codes, _, _ = run_lint(tmp_path, """
+        import jax
+
+        LAST = None
+
+        @jax.jit
+        def step(x):
+            global LAST
+            LAST = x
+            return x + 1
+    """)
+    assert codes == ["RL004"]
+
+
+# --------------------------------------------------------------- RL005
+
+RL005_POS = """
+    import time
+
+    async def pump():
+        time.sleep(0.01)
+"""
+
+RL005_NEG = """
+    import asyncio
+
+    async def pump():
+        await asyncio.sleep(0.01)
+"""
+
+
+def test_rl005_blocking_sleep(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, RL005_POS)
+    assert codes == ["RL005"]
+    assert "asyncio.sleep" in findings[0].message
+
+
+def test_rl005_async_sleep_ok(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL005_NEG)
+    assert codes == []
+
+
+def test_rl005_device_transfer_and_queue(tmp_path):
+    codes, _, _ = run_lint(tmp_path, """
+        import queue
+
+        import jax
+
+        inbox = queue.Queue()
+
+        async def drain():
+            item = inbox.get()
+            return jax.device_get(item)
+    """)
+    assert sorted(codes) == ["RL005", "RL005"]
+
+
+def test_rl005_asyncio_queue_ok(tmp_path):
+    codes, _, _ = run_lint(tmp_path, """
+        import asyncio
+
+        inbox = asyncio.Queue()
+
+        async def drain():
+            return await inbox.get()
+    """)
+    assert codes == []
+
+
+# --------------------------------------------------------------- RL006
+
+RL006_POS_ID = """
+    from repro.core.model import DecisionKey
+
+    def make_key(obj):
+        return DecisionKey("serve_tick", (id(obj),))
+"""
+
+RL006_POS_TAINT = """
+    from repro.core.model import DecisionKey
+
+    def make_key(obj):
+        ident = id(obj)
+        return DecisionKey("serve_tick", (ident,))
+"""
+
+RL006_POS_UNHASHABLE = """
+    from repro.core.model import DecisionKey
+
+    def make_key(shape):
+        return DecisionKey("serve_tick", [shape])
+"""
+
+RL006_NEG = """
+    from repro.core.model import DecisionKey
+
+    def make_key(cfg):
+        return DecisionKey("serve_tick", (cfg.name, cfg.d_model))
+"""
+
+
+def test_rl006_id_derived_key(tmp_path):
+    for src in (RL006_POS_ID, RL006_POS_TAINT):
+        codes, _, _ = run_lint(tmp_path, src)
+        assert codes == ["RL006"]
+
+
+def test_rl006_unhashable_component(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, RL006_POS_UNHASHABLE)
+    assert codes == ["RL006"]
+    assert "unhashable" in findings[0].message
+
+
+def test_rl006_stable_key_ok(tmp_path):
+    codes, _, _ = run_lint(tmp_path, RL006_NEG)
+    assert codes == []
+
+
+# ------------------------------------------------- suppression round-trip
+
+def test_suppression_round_trip(tmp_path):
+    flagged, _, sup0 = run_lint(tmp_path, RL003_POS)
+    assert flagged == ["RL003"] and sup0 == 0
+    suppressed_src = RL003_POS.replace(
+        "outs.append(jax.jit(f)(xs))",
+        "outs.append(jax.jit(f)(xs))  # repro-lint: disable=RL003")
+    codes, _, suppressed = run_lint(tmp_path, suppressed_src)
+    assert codes == []
+    assert suppressed == 1
+
+
+def test_suppression_is_per_code(tmp_path):
+    # a disable= for a different rule does not mask the finding
+    src = RL003_POS.replace(
+        "outs.append(jax.jit(f)(xs))",
+        "outs.append(jax.jit(f)(xs))  # repro-lint: disable=RL001")
+    codes, _, suppressed = run_lint(tmp_path, src)
+    assert codes == ["RL003"]
+    assert suppressed == 0
+
+
+# ----------------------------------------------------- CLI + select
+
+def test_cli_exit_codes_and_output(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(RL003_POS))
+    assert lint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "RL003" in out and "bad.py" in out
+
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert lint_main([str(clean)]) == 0
+
+
+def test_cli_select(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(RL003_POS))
+    assert lint_main([str(bad), "--select", "RL001", "--quiet"]) == 0
+    assert lint_main([str(bad), "--select", "RL003", "--quiet"]) == 1
+
+
+def test_cli_rejects_unknown_rule(tmp_path):
+    with pytest.raises(SystemExit):
+        lint_main([str(tmp_path), "--select", "RL999"])
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    codes, findings, _ = run_lint(tmp_path, "def broken(:\n")
+    assert codes == ["RL000"]
+
+
+# ----------------------------------------------------- self-check: tree
+
+def test_shipped_tree_is_clean():
+    """`python -m repro.analysis.lint src tests benchmarks` exits 0 on
+    the shipped tree — the exact invocation CI gates on."""
+    findings, _ = lint_paths([REPO / "src", REPO / "tests",
+                              REPO / "benchmarks"])
+    assert findings == [], "\n".join(
+        f"{f.path}:{f.line}: {f.code} {f.message}" for f in findings)
+
+
+def test_shipped_tree_suppressions_are_sparse():
+    """The sanctioned-sync suppressions stay a short, deliberate list —
+    if this grows past a handful, the gate is being papered over."""
+    _, suppressed = lint_paths([REPO / "src"])
+    assert suppressed <= 8
+
+
+def test_default_config_encodes_serve_roots():
+    cfg = LintConfig()
+    assert "_tick_fused" in cfg.hot_roots
+    assert "_pump" in cfg.hot_roots
+    assert "decode_loop" in cfg.hot_modules
+    assert cfg.donating_factories["make_fused_decode_step"] == (1,)

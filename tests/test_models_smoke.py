@@ -44,7 +44,7 @@ def test_one_train_step(arch):
     delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
                                       - b.astype(jnp.float32))))
                 for a, b in zip(jax.tree.leaves(params),
-                                jax.tree.leaves(p2)))
+                                jax.tree.leaves(p2), strict=True))
     assert delta > 0
     assert int(o2["step"]) == 1
 

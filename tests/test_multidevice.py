@@ -231,7 +231,9 @@ def test_sharding_rules_divisibility():
             specs, is_leaf=lambda x: isinstance(
                 x, jax.sharding.PartitionSpec))
         assert len(flat_p) == len(flat_s)
-        for (path, leaf), spec in zip(flat_p, flat_s):
-            for dim, ax in zip(leaf.shape, tuple(spec)):
+        for (path, leaf), spec in zip(flat_p, flat_s, strict=True):
+            # spec may be shorter than the leaf rank (trailing dims
+            # unsharded) -- truncation is the semantics here
+            for dim, ax in zip(leaf.shape, tuple(spec), strict=False):
                 if ax is not None:
                     assert dim % StubMesh.shape[ax] == 0, (name, path, spec)

@@ -61,7 +61,7 @@ def test_claim_acc_improves_overall_and_tracks_envelope_at_scale():
     best_at_scale = max(s[-1] for s in statics.values())
     assert accs[-1] >= best_at_scale * 0.95              # (b)
     for c, vals in statics.items():                      # (c)
-        worst = min(v / a for v, a in zip(vals, accs))
+        worst = min(v / a for v, a in zip(vals, accs, strict=True))
         assert worst < 0.9, (c, worst)
 
 

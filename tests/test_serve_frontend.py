@@ -342,7 +342,8 @@ def test_burst_drain_spreads_inter_token_times(setup):
 
     out, rec = asyncio.run(go())
     assert len(out) == n_new and len(rec.token_times) == n_new
-    gaps = [b - a for a, b in zip(rec.token_times, rec.token_times[1:])]
+    gaps = [b - a for a, b in zip(rec.token_times, rec.token_times[1:],
+                                  strict=False)]
     assert all(g > 0 for g in gaps), gaps   # strictly increasing stamps
     # stamps stay causal: anchored after the first-token time
     assert rec.token_times[0] >= rec.first_token_at
@@ -432,7 +433,7 @@ def test_materialize_seeded_prompts():
     trace = poisson_trace(50, rate_rps=50.0, seed=2)
     m1 = materialize(trace, vocab=128, seed=2)
     m2 = materialize(trace, vocab=128, seed=2)
-    for (_, p1), (_, p2) in zip(m1, m2):
+    for (_, p1), (_, p2) in zip(m1, m2, strict=True):
         np.testing.assert_array_equal(p1, p2)
         assert p1.dtype == np.int32
         assert p1.min() >= 0 and p1.max() < 128

@@ -1,0 +1,89 @@
+"""Strict runtime mode (core/strict.py): poison-on-donate cache pools
+and the hot-dispatch transfer guard.
+
+The whole suite runs with ``REPRO_STRICT=1`` (tests/conftest.py), so
+every serve/train test doubles as a strict-mode regression; these tests
+pin the enforcement semantics themselves."""
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import strict
+from repro.models import init_params
+from repro.serve import SlotKVCachePool
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_suite_runs_strict():
+    assert os.environ.get("REPRO_STRICT") == "1"
+    assert strict.enabled()
+
+
+def test_poison_on_donate_then_adopt(setup):
+    cfg, _ = setup
+    pool = SlotKVCachePool(cfg, n_slots=2, max_len=16)
+    held = pool.caches                      # grab before the "dispatch"
+    pool.mark_donated("test fused dispatch")
+    with pytest.raises(strict.DonatedCacheError) as exc:
+        _ = pool.caches
+    assert "test fused dispatch" in str(exc.value)
+    assert "RL001" in str(exc.value)        # points at the lint rule
+    pool.adopt(held)                        # rebind clears the poison
+    assert pool.caches is held
+    assert pool.allocations == 1
+
+
+def test_direct_assignment_clears_poison(setup):
+    cfg, _ = setup
+    pool = SlotKVCachePool(cfg, n_slots=2, max_len=16)
+    held = pool.caches
+    pool.mark_donated("test dispatch")
+    pool.caches = held                      # write_slot-style rebind
+    assert pool.caches is held
+
+
+def test_poison_inert_when_strict_off(setup, monkeypatch):
+    cfg, _ = setup
+    monkeypatch.setenv("REPRO_STRICT", "0")
+    if strict._FORCED:                      # a prior enable() would win
+        pytest.skip("strict force-enabled in this process")
+    pool = SlotKVCachePool(cfg, n_slots=2, max_len=16)
+    pool.mark_donated("test dispatch")
+    assert pool.caches is not None          # recorded but not enforced
+
+
+def test_hot_dispatch_guard_allows_explicit_get(setup):
+    """Inside the guard, the sanctioned syncs still work: explicit
+    ``device_get`` and ``block_until_ready`` are not implicit
+    transfers.  (The implicit-D2H *rejection* only materialises on
+    accelerator backends — CPU reads are zero-copy and unguardable —
+    so this pins the allowed side, which must hold everywhere.)"""
+    import jax.numpy as jnp
+
+    with strict.hot_dispatch_guard():
+        y = jax.block_until_ready(jnp.arange(4) * 2)
+        got = jax.device_get(y)
+    assert got.tolist() == [0, 2, 4, 6]
+
+
+def test_enable_forces_strict_in_subprocess(subproc):
+    """``--strict`` path: strict.enable() wins over REPRO_STRICT=0."""
+    r = subproc("""
+import os
+os.environ["REPRO_STRICT"] = "0"
+from repro.core import strict
+assert not strict.enabled()
+strict.enable()
+assert strict.enabled()
+print("ok")
+""", n_devices=1)
+    assert r.returncode == 0, r.stderr
+    assert "ok" in r.stdout

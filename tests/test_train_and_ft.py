@@ -45,7 +45,8 @@ def test_grad_accum_equivalence(setup):
     p1, _, m1 = s1(params, opt, batch)
     p2, _, m2 = s2(params, opt, batch)
     assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
-    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=2e-4, atol=2e-5)
@@ -59,7 +60,8 @@ def test_checkpoint_roundtrip(setup, tmp_path):
     assert path and path.endswith("step_00000007")
     (p2, o2), step = checkpointer.restore(path, (params, opt))
     assert step == 7
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
