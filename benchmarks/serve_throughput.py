@@ -74,6 +74,18 @@ from repro.serve import ServeScheduler, percentile  # noqa: E402
 # metric; here we assert the global ratio stays above this floor.
 MESH_SMOKE_FLOOR = 0.05
 
+# Paged smoke guard floor: the synthetic trace has no shared prefixes,
+# so the paged pool buys nothing here and pays the per-dispatch page
+# table upload plus the gather indirection.  On CPU the interpret-mode
+# Pallas paged kernel also pays a per-page grid step (page_size-sized
+# tiles instead of one contiguous block_kv), which lands the honest
+# ratio around 0.3-0.4x of contiguous fused — on real accelerators the
+# tile DMA is the only difference.  The guard catches collapses (a
+# lost donation or a recompile per dispatch is an order of magnitude,
+# not percents); the prefix-reuse *win* is guarded in
+# benchmarks/load_harness.py on the shared_prefix trace.
+PAGED_SMOKE_FLOOR = 0.25
+
 
 def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
                     prompt_lens: tuple[int, ...], new_tokens: int,
@@ -94,10 +106,12 @@ def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
 
 
 def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
-               max_len: int, dispatch_depth=None, mesh=None):
+               max_len: int, dispatch_depth=None, mesh=None,
+               paged=False):
     sched = ServeScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
                            executor=adaptive(SequentialExecutor(), policy),
-                           dispatch_depth=dispatch_depth, mesh=mesh)
+                           dispatch_depth=dispatch_depth, mesh=mesh,
+                           paged=paged)
     sched.warmup()
     # Untimed steady-state warm: one request per distinct prompt length
     # compiles every shape-dependent host op (token slice / pad per
@@ -115,6 +129,7 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
     sched.host_roundtrips = 0
     sched.host_overhead_s = 0.0
     sched.decode_loop_iters = 0
+    sched.prefill_stall_s = 0.0
     # Snapshot the engine trace so the report covers only the timed
     # replay's depth decisions, not the warm phase's seeded ones.
     model = sched.decision_model()
@@ -174,7 +189,16 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
         "smoothed_t_iter_s":
             sched.acc.cache.peek_t_iter(sched.prefill_key)
             if hasattr(sched.acc, "cache") else None,
+        # Decode-lane time lost to prefill chunks with nothing in
+        # flight to hide them behind — what serve_prefill_interleave
+        # trades against admission starvation.
+        "prefill_stall_s": round(sched.prefill_stall_s, 4),
+        "prefill_stall_ms_per_tick":
+            round(sched.prefill_stall_s / len(sched.trace) * 1e3, 4)
+            if sched.trace else 0.0,
     }
+    if paged:
+        report["prefix"] = sched.pool.prefix_stats()
     if dispatch_depth is not None and model is not None:
         entries = model.trace.entries("serve_dispatch_depth")[depth_seen:]
         report["depth_decisions"] = len(entries)
@@ -216,6 +240,7 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
           f"host {report['host_overhead_ms_per_token']:6.2f}ms/tok | "
           f"{report['dispatches_per_token']:.2f} dispatches/tok | "
           f"{report['host_roundtrips_per_token']:.2f} round-trips/tok | "
+          f"stall {report['prefill_stall_ms_per_tick']:.2f}ms/tick | "
           f"{report['ticks']} ticks")
     dm = report.get("device_metrics")
     if dm:
@@ -238,6 +263,12 @@ def main() -> int:
                     help="single seed for the arrival and prompt-length "
                          "RNGs (every configuration replays the same "
                          "draw)")
+    ap.add_argument("--paged", action="store_true",
+                    help="also run the fused adaptive configuration on "
+                         "the paged KV pool (and shard the --mesh run's "
+                         "pool the same way); with --smoke, fails if "
+                         "the paged run collapses below "
+                         "PAGED_SMOKE_FLOOR of the contiguous fused run")
     ap.add_argument("--mesh", default="off",
                     help="also run the fused adaptive configuration "
                          "sharded over a 'DATA,MODEL' device mesh "
@@ -275,6 +306,12 @@ def main() -> int:
     fused_rep, fused_sched = run_policy(
         "fused", AdaptiveCoreChunk(), cfg, params, trace,
         n_slots=n_slots, max_len=max_len, dispatch_depth="auto")
+    paged_rep = None
+    if args.paged:
+        paged_rep, _ = run_policy(
+            "paged", AdaptiveCoreChunk(), cfg, params, trace,
+            n_slots=n_slots, max_len=max_len, dispatch_depth="auto",
+            paged=True)
     per_tick_rep, _ = run_policy(
         "per-tick", AdaptiveCoreChunk(), cfg, params, trace,
         n_slots=n_slots, max_len=max_len)
@@ -294,6 +331,19 @@ def main() -> int:
             "adaptive_over_static": adaptive_over_static,
             "smoke": bool(args.smoke)}
 
+    paged_ok = True
+    if paged_rep is not None:
+        paged_over_fused = ratio(paged_rep, fused_rep)
+        blob["paged"] = paged_rep
+        blob["paged_over_fused"] = paged_over_fused
+        print(f"  paged/fused: {paged_over_fused:.2f}x on a "
+              "no-shared-prefix trace (page-table tax only)")
+        if args.smoke and paged_over_fused < PAGED_SMOKE_FLOOR:
+            print(f"FAIL: paged fused decode {paged_over_fused:.3f}x "
+                  f"contiguous (floor {PAGED_SMOKE_FLOOR}) — paged-path "
+                  "regression")
+            paged_ok = False
+
     mesh_ok = True
     trace_sched = fused_sched
     if args.mesh.strip().lower() not in ("off", "none", ""):
@@ -309,7 +359,7 @@ def main() -> int:
         mesh_rep, trace_sched = run_policy(
             "mesh", AdaptiveCoreChunk(), cfg, params, trace,
             n_slots=mesh_slots, max_len=max_len, dispatch_depth="auto",
-            mesh=mesh)
+            mesh=mesh, paged=args.paged)
         n_dev = int(mesh.devices.size)
         per_dev = round(mesh_rep["tokens_per_s"] / n_dev, 2)
         mesh_over_single = ratio(mesh_rep, fused_rep)
@@ -318,6 +368,7 @@ def main() -> int:
             "n_devices": n_dev,
             "n_replicas": reps,
             "n_slots": mesh_slots,
+            "paged": bool(args.paged),
             "backend": jax.default_backend(),
             "tokens_per_s_per_device": per_dev,
             "mesh_over_single_fused": mesh_over_single,
@@ -359,7 +410,7 @@ def main() -> int:
               f"({adaptive_over_static:.2f}x) — dispatch-granularity "
               "regression")
         return 1
-    if not mesh_ok:
+    if not mesh_ok or not paged_ok:
         return 1
     if not args.smoke and fused_over_per_tick < 1.3:
         print("WARNING: fused decode below the 1.3x target over the "

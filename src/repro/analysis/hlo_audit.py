@@ -222,23 +222,34 @@ def audit_scheduler(sched, *, inject_reshard: bool = False,
     """
     import jax.numpy as jnp
 
-    from ..serve.decode_loop import make_fused_decode_step
+    from ..serve.decode_loop import (make_fused_decode_step,
+                                     make_paged_decode_step)
 
     if not sched._fused:
         raise ValueError("hlo-audit needs the fused decode path "
                          "(dispatch_depth != None)")
+    paged = bool(getattr(sched, "paged", False))
     if inject_reshard:
-        step = make_fused_decode_step(
-            sched.cfg, window=sched.window,
-            kernel_tuner=sched.kernel_tuner,
-            max_depth=sched.max_dispatch_depth,
-            cache_shardings=sched.pool.shardings,
-            _inject_reshard=True)
+        if paged:
+            step = make_paged_decode_step(
+                sched.cfg, page_size=sched.pool.page_size,
+                max_len=sched.max_len, kernel_tuner=sched.kernel_tuner,
+                max_depth=sched.max_dispatch_depth,
+                cache_shardings=sched.pool.shardings,
+                _inject_reshard=True)
+        else:
+            step = make_fused_decode_step(
+                sched.cfg, window=sched.window,
+                kernel_tuner=sched.kernel_tuner,
+                max_depth=sched.max_dispatch_depth,
+                cache_shardings=sched.pool.shardings,
+                _inject_reshard=True)
     else:
         step = sched._fused_step()
     n = sched.pool.n_slots
+    pt = (sched.pool.page_table_array(),) if paged else ()
     lowered = step.lower(
-        sched.params, sched.pool.caches, jnp.zeros(n, jnp.int32),
+        sched.params, sched.pool.caches, *pt, jnp.zeros(n, jnp.int32),
         sched.pool.positions_array(), jnp.zeros(n, jnp.int32))
     model_parallel = 1
     if sched.mesh is not None:
@@ -277,6 +288,10 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=32)
     ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--paged", action="store_true",
+                    help="audit the paged fused step (page-table "
+                         "gathers + flat-store scatters in the body)")
+    ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--inject-reshard", action="store_true",
                     help="deliberately reshard the pool inside the loop "
                          "body (the audit must then FAIL — gate "
@@ -306,8 +321,20 @@ def main(argv=None) -> int:
     sched = ServeScheduler(
         cfg, params, n_slots=args.slots, max_len=args.max_len,
         executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
-        dispatch_depth=args.depth, mesh=mesh)
-    report = audit_scheduler(sched, inject_reshard=args.inject_reshard)
+        dispatch_depth=args.depth, mesh=mesh,
+        paged=args.paged, page_size=args.page_size)
+    # The paged store is replicated over 'data' (prefix sharing — see
+    # launch/sharding.paged_cache_specs), so the plan predicts one
+    # all-gather of the per-step lane updates: (slots, Hkv_shard, D)
+    # rows per attn layer, not scalars.  Raise the small-gather budget
+    # to one lane-update row set; a gathered *pool* is still MiB+.
+    gmax = SMALL_GATHER_MAX
+    if args.paged and mesh is not None:
+        model_par = int(dict(mesh.shape).get("model", 1))
+        gmax = max(gmax, 4 * args.slots * cfg.head_dim_ *
+                   -(-cfg.n_kv_heads // model_par))
+    report = audit_scheduler(sched, inject_reshard=args.inject_reshard,
+                             small_gather_max=gmax)
     print(format_report(report))
     if args.out:
         with open(args.out, "w") as f:

@@ -55,9 +55,11 @@ class LintConfig:
     The defaults encode the serving stack's layout: the hot-path roots
     are the fused tick, the decode-loop module, and the front end's
     token pump; ``donating_factories`` names the call surfaces that
-    return donated-argument jits (``make_fused_decode_step`` and the
-    scheduler's ``_fused_step`` accessor both donate the cache pool at
-    positional index 1).  Tests override these to lint micro-fixtures.
+    return donated-argument jits (``make_fused_decode_step`` /
+    ``make_paged_decode_step`` and the scheduler's ``_fused_step`` /
+    ``_paged_step`` accessors all donate the cache pool at positional
+    index 1 — the paged step's page tables at index 2 are deliberately
+    *not* donated).  Tests override these to lint micro-fixtures.
     """
 
     select: frozenset[str] | None = None      # None = all rules
@@ -67,7 +69,9 @@ class LintConfig:
     donating_factories: Mapping[str, tuple[int, ...]] = \
         dataclasses.field(default_factory=lambda: {
             "make_fused_decode_step": (1,),
+            "make_paged_decode_step": (1,),
             "_fused_step": (1,),
+            "_paged_step": (1,),
         })
 
     def wants(self, code: str) -> bool:

@@ -636,6 +636,113 @@ class ExecutionModel:
                     ("device_step_s", device_step_s), ("eff", eff))
             + tuple(inputs)))
 
+    def page_size(self, key: DecisionKey | Hashable, *,
+                  candidates: Sequence[int], max_len: int,
+                  page_mgmt_s: float, prefill_token_s: float,
+                  evidence: Sequence[Hashable] = (),
+                  inputs: tuple = ()) -> Decision:
+        """KV page size for a paged slot pool (decision kind
+        ``serve_page_size``): how many token rows one page should hold.
+
+        This is the paper's chunk-size question applied to *memory
+        layout*.  A page is a chunk of cache rows, and the same two
+        opposing costs price it: ``page_mgmt_s`` is the measured
+        per-page fixed overhead a request pays on the host (table
+        updates, refcounts, allocation — the ``T0`` of the Overhead Law,
+        observed from the pool's ``ensure_writable``/table-build time),
+        so small pages multiply it by ``max_len / ps``; and a prompt's
+        tail page is half empty on average, so large pages waste
+        ``ps / 2`` rows of prefill writes and prefix-shareable
+        granularity, priced at the online-refined per-token prefill time
+        ``prefill_token_s``.  The pick minimises
+
+            cost(ps) = (max_len / ps) * page_mgmt_s
+                     + (ps / 2)      * prefill_token_s
+
+        over the candidate set — analytic until the serve loop has
+        observed real page-management and prefill timings (the
+        ``evidence`` keys), online after.  With no timing signal at all
+        the middle candidate wins (pure prior).  The chosen size rides
+        in ``chunk``.
+        """
+        dkey = DecisionKey.wrap(key)
+        prior: AnalyticOverheadLaw = self.policies["prior"]
+        cands = sorted({max(int(c), 1) for c in candidates})
+        if not cands:
+            raise ValueError("page_size needs at least one candidate")
+        if page_mgmt_s <= 0.0 and prefill_token_s <= 0.0:
+            ps = cands[len(cands) // 2]
+            costs = ()
+        else:
+            scored = [(max_len / c * max(page_mgmt_s, 0.0)
+                       + c / 2.0 * max(prefill_token_s, 0.0), c)
+                      for c in cands]
+            _, ps = min(scored)
+            costs = tuple((c, round(s, 9)) for s, c in scored)
+        provenance = self.provenance_of(dkey)
+        for ekey in evidence:
+            provenance = provenance_max(provenance,
+                                        self.provenance_of(ekey))
+        return self._finish(Decision(
+            key=dkey, policy=prior.name, provenance=provenance,
+            cores=1, chunk=ps,
+            inputs=(("max_len", max_len),
+                    ("page_mgmt_s", page_mgmt_s),
+                    ("prefill_token_s", prefill_token_s),
+                    ("candidates", tuple(cands)),
+                    ("costs", costs)) + tuple(inputs)))
+
+    def prefill_interleave(self, key: DecisionKey | Hashable, *,
+                           pending_chunks: int, decode_window_s: float,
+                           chunk_cost_s: float, max_chunks: int,
+                           evidence: Sequence[Hashable] = (),
+                           inputs: tuple = ()) -> Decision:
+        """Prefill/decode interleave ratio for a fused serve tick
+        (decision kind ``serve_prefill_interleave``): how many prefill
+        chunk-ops to run in the window one fused decode dispatch keeps
+        the device busy.
+
+        While a fused decode dispatch is in flight the host is free —
+        that window is ``decode_window_s`` (the online-refined fused
+        per-token time times the dispatch depth and active lanes).  Each
+        prefill chunk costs ``chunk_cost_s`` of blocking host+device
+        time; running more chunks than fit the window stalls the decode
+        lanes when the next dispatch finds no queued work (the
+        ``prefill_stall_s`` the throughput benchmark surfaces), while
+        running fewer starves admission.  The ratio is simply how many
+        chunks fit:
+
+            r = clamp(floor(decode_window_s / chunk_cost_s),
+                      1, min(pending_chunks, max_chunks))
+
+        — at least one chunk always runs (prefill must never starve), at
+        most what is actually pending.  An unknown chunk cost opens the
+        cap: with nothing measured yet there is nothing to protect.
+        Provenance follows the ``evidence`` keys (fused-step and prefill
+        timings).  The ratio rides in ``chunk``.
+        """
+        import math
+
+        dkey = DecisionKey.wrap(key)
+        prior: AnalyticOverheadLaw = self.policies["prior"]
+        cap = max(min(int(pending_chunks), int(max_chunks)), 1)
+        if chunk_cost_s > 0.0 and decode_window_s > 0.0:
+            r = int(math.floor(decode_window_s / chunk_cost_s))
+        else:
+            r = cap
+        r = min(max(r, 1), cap)
+        provenance = self.provenance_of(dkey)
+        for ekey in evidence:
+            provenance = provenance_max(provenance,
+                                        self.provenance_of(ekey))
+        return self._finish(Decision(
+            key=dkey, policy=prior.name, provenance=provenance,
+            cores=1, chunk=r,
+            inputs=(("pending_chunks", pending_chunks),
+                    ("decode_window_s", decode_window_s),
+                    ("chunk_cost_s", chunk_cost_s),
+                    ("max_chunks", max_chunks)) + tuple(inputs)))
+
     def default_cores_chunk(self, count: int, max_cores: int) -> AccDecision:
         """The customization-point *default* decision (paper: "splits the
         work into equally sized chunks while utilizing all available

@@ -47,6 +47,29 @@ class DonatedCacheError(RuntimeError):
             f"dispatch's outputs and must not be read (RL001)")
 
 
+class StalePageError(RuntimeError):
+    """A page table references a page that was freed back to the pool.
+
+    The paged KV pool (``serve/kv_cache.PagedKVCachePool``) poisons a
+    page the moment its refcount drops to zero — whether it was released
+    with its slot, evicted from the prefix cache, or left behind as a
+    copy-on-write source.  Until the page is re-acquired from the free
+    list, any dispatch whose page table still maps it would read rows
+    that a *different* request may already be writing — the paged
+    analogue of the donated-buffer read RL001 exists for.  The pool
+    validates every table it hands to a gather and raises this instead
+    of silently serving a reused page."""
+
+    def __init__(self, slot: int, page: int):
+        self.slot = slot
+        self.page = page
+        super().__init__(
+            f"slot {slot}'s page table maps page {page}, which was "
+            f"freed back to the pool and not re-acquired — a gather "
+            f"through this table would read rows now owned by another "
+            f"request (RL001, paged)")
+
+
 def enabled() -> bool:
     """Strict mode is on via ``REPRO_STRICT=1`` or :func:`enable`."""
     return _FORCED or os.environ.get("REPRO_STRICT", "") == "1"

@@ -148,3 +148,128 @@ def flash_attention_pallas(
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def _paged_kernel(pt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, causal: bool,
+                  hq: int, sq: int, page_size: int, nk: int):
+    g = pl.program_id(0)
+    j = pl.program_id(1)
+    b = g // hq
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = lens_ref[b]
+    q_off = kv_len - sq          # queries end-aligned, as in _kernel
+    k_off = j * page_size
+
+    @pl.when(k_off < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[:, 0].astype(jnp.float32)
+        v = v_ref[:, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+        qi = q_off + jax.lax.broadcasted_iota(
+            jnp.int32, (sq, page_size), 0)
+        kj = k_off + jax.lax.broadcasted_iota(
+            jnp.int32, (sq, page_size), 1)
+        mask = kj < kv_len
+        if causal:
+            mask &= qi >= kj
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+        l_cur = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = jnp.broadcast_to(m_cur[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_cur[:, None], l_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def paged_flash_attention_pallas(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, kv_lens: jax.Array, *,
+    page_size: int, causal: bool = True, scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Flash attention reading K/V through a page table.
+
+    ``q``: (B, Hq, Sq, D) queries, end-aligned per lane (row ``r`` of
+    lane ``b`` sits at global position ``kv_lens[b] - Sq + r``).
+    ``k_pages``/``v_pages``: the paged pool's flat token-major stores,
+    ``(n_pages * page_size, Hkv, D)`` — page ``p`` owns rows
+    ``[p*ps, (p+1)*ps)``.  ``page_table``: (B, n_blocks) int32, lane
+    ``b``'s block ``j`` lives in page ``page_table[b, j]``.  ``kv_lens``:
+    (B,) int32 true kv length per lane.
+
+    The page table and lengths ride in as **scalar-prefetched**
+    operands (``pltpu.PrefetchScalarGridSpec``): the BlockSpec index map
+    reads ``page_table[b, j]`` to aim each kv tile's DMA directly at
+    its page in HBM — the indirection costs an SMEM lookup, not a
+    gather materialising the contiguous view.  With
+    ``block_kv == page_size`` the tile schedule is *identical* to
+    ``flash_attention_pallas`` over contiguously-laid K/V, so the two
+    are byte-identical — the property the paged pool's hypothesis test
+    pins (tests/test_serve_paged.py).  Pages at or past a lane's length
+    skip their compute via ``pl.when`` — unmapped (scratch) entries are
+    never touched, the structural "don't schedule empty chunks".
+
+    Sliding windows are unsupported by design: the paged pool rejects
+    SWA (a wrapped ring write would straddle shared pages)."""
+    b, hq, sq, d = q.shape
+    rows, hkv, _ = k_pages.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    ps = int(page_size)
+    assert rows % ps == 0, (rows, ps)
+    nk = int(page_table.shape[1])
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, causal=causal, hq=hq, sq=sq,
+        page_size=ps, nk=nk)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, sq, d),
+                         lambda g, j, pt, lens: (g // hq, g % hq, 0, 0)),
+            pl.BlockSpec((ps, 1, d),
+                         lambda g, j, pt, lens:
+                         (pt[g // hq, j], (g % hq) // group, 0)),
+            pl.BlockSpec((ps, 1, d),
+                         lambda g, j, pt, lens:
+                         (pt[g // hq, j], (g % hq) // group, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, sq, d), lambda g, j, pt, lens: (g // hq, g % hq, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((sq, d), jnp.float32),
+            pltpu.VMEM((sq, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((sq, _STAT_LANES), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(page_table, jnp.int32), jnp.asarray(kv_lens, jnp.int32),
+      q, k_pages, v_pages)

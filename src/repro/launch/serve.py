@@ -159,6 +159,22 @@ def main() -> None:
                          "default), an integer (fixed depth), or 'off' "
                          "(legacy per-tick decode, one round-trip per "
                          "token)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: fixed-size pages + on-device "
+                         "page tables instead of contiguous per-slot "
+                         "rows, with copy-on-write prefix reuse (a hot "
+                         "system prompt is prefilled once and shared "
+                         "read-only) and chunked prefill interleaved "
+                         "into the fused decode loop.  Requires a fused "
+                         "--dispatch-depth")
+    ap.add_argument("--page-size", default="auto",
+                    help="tokens per KV page: 'auto' (serve_page_size "
+                         "engine decision from the Overhead-Law prior, "
+                         "default) or an integer")
+    ap.add_argument("--prefill-interleave", default="auto",
+                    help="max prefill chunk-ops interleaved per fused "
+                         "decode tick: 'auto' (serve_prefill_interleave "
+                         "engine decision, default) or an integer")
     ap.add_argument("--explain-decisions", action="store_true",
                     help="dump the ExecutionModel decision trace: every "
                          "serve-tick, admission and kernel-block choice "
@@ -240,14 +256,32 @@ def main() -> None:
         print(f"mesh {data}x{model_par} over {mesh.devices.size} of "
               f"{len(jax.devices())} {jax.default_backend()} devices | "
               f"{reps} replicas x {n_slots // reps} slots")
+    page_size = args.page_size.strip().lower()
+    page_size = "auto" if page_size == "auto" else int(page_size)
+    interleave = args.prefill_interleave.strip().lower()
+    interleave = "auto" if interleave == "auto" else int(interleave)
     sched = ServeScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
                            executor=executor, kernel_tuner=tuner,
                            dispatch_depth=depth, admission=admission,
-                           mesh=mesh)
+                           mesh=mesh, paged=args.paged,
+                           page_size=page_size,
+                           prefill_interleave=interleave)
     sched.warmup()
+
+    def print_paged_stats():
+        if not args.paged:
+            return
+        st = sched.pool.prefix_stats()
+        print(f"paged: page_size={st['page_size']} pages "
+              f"{st['pages_in_use']}/{st['n_pages']} | prefix hits "
+              f"{st['prefix_hits']}/{st['prefix_lookups']} avoided "
+              f"{st['prefill_tokens_avoided']} tok | cow "
+              f"{st['cow_copies']} | prefill stall "
+              f"{sched.prefill_stall_s * 1e3:.0f}ms")
 
     if args.frontend:
         serve_frontend(sched, args)
+        print_paged_stats()
         if args.explain_decisions:
             model = sched.decision_model()
             if model is not None:
@@ -287,6 +321,7 @@ def main() -> None:
           f"p95={percentile(lats, 95) * 1e3:.0f}ms | "
           f"ttft p50={percentile(ttfts, 50) * 1e3:.0f}ms")
     print("sample:", outs[rids[0]])
+    print_paged_stats()
     if tuner is not None:
         print(f"kernel autotune: {tuner.searches} measured searches, "
               f"{tuner.cache_hits} persisted winners reused")

@@ -209,6 +209,37 @@ def cache_specs(cfg: ArchConfig, mesh, global_batch: int,
     return specs
 
 
+def paged_cache_specs(cfg: ArchConfig, mesh, n_slots: int,
+                      max_len: int) -> list:
+    """Per-layer PartitionSpecs for ``serve/kv_cache.PagedKVCachePool``.
+
+    Attention layers are flat token-major page stores
+    ``(n_pages * page_size, H_kv, D)``.  The page dim is **replicated
+    over the data axes**: prefix sharing means any lane may map any
+    page, so sharding rows over 'data' would turn every lane's
+    page-table gather into a cross-replica all-gather of its whole
+    logical row.  Replicating keeps gathers local; the cost is one
+    small per-step all-gather of the ``(n_slots, H_kv, D)`` lane
+    updates scattered back into the shared store — O(B·H·D), the same
+    order as the decode attention partials.  KV heads shard over
+    'model' exactly as in ``cache_specs`` (head_dim fallback).
+
+    Recurrent layer state stays slot-major and keeps the ``cache_specs``
+    treatment (slot dim over data axes when divisible)."""
+    axis_sizes = dict(mesh.shape)
+    hax, dax = _heads_spec(cfg.n_kv_heads, cfg.head_dim_, axis_sizes)
+    slot_specs = cache_specs(cfg, mesh, n_slots, max_len)
+    specs: list = []
+    for kind, slot_spec in zip(cfg.layer_kinds(), slot_specs,
+                               strict=True):
+        if kind in ("attn", "shared_attn"):
+            kv = P(None, hax, dax)
+            specs.append({"k": kv, "v": kv})
+        else:
+            specs.append(slot_spec)
+    return specs
+
+
 def to_shardings(mesh, spec_tree: Any) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

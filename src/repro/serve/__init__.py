@@ -7,7 +7,7 @@ from .frontend import (QueueFullError, RequestRecord, ServeFrontend,
 from .kv_cache import CacheLayoutError, SlotKVCachePool, SlotOverflowError
 from .loadgen import (GENERATORS, SLOModel, TraceRequest, bursty_trace,
                       heavy_tailed_trace, materialize, poisson_trace,
-                      trace_summary)
+                      shared_prefix_trace, trace_summary)
 from .scheduler import (TERMINAL_STATES, PromptTooLongError, Request,
                         RequestState, ServeScheduler, TickRecord,
                         percentile)
@@ -20,7 +20,8 @@ __all__ = [
     "percentile", "PromptTooLongError", "TERMINAL_STATES",
     "ServeFrontend", "TokenStream", "RequestRecord", "QueueFullError",
     "SLOModel", "TraceRequest", "GENERATORS", "poisson_trace",
-    "bursty_trace", "heavy_tailed_trace", "materialize", "trace_summary",
+    "bursty_trace", "heavy_tailed_trace", "shared_prefix_trace",
+    "materialize", "trace_summary",
     "DEFAULT_MAX_DEPTH", "make_fused_decode_step", "make_lane_step",
     "masked_merge",
 ]

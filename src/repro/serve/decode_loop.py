@@ -169,3 +169,136 @@ def make_fused_decode_step(cfg: ArchConfig, *, window: int | None = None,
         return caches, out_buf, toks
 
     return jax.jit(fused, donate_argnums=(1,))
+
+
+_ATTN_KINDS = ("attn", "shared_attn")
+
+
+def make_paged_lane_step(cfg: ArchConfig, *, page_size: int, max_len: int,
+                         kernel_tuner=None) -> Callable:
+    """The per-slot decode lane over a *paged* pool, vmapped.
+
+    ``lanes(params, page_tables, caches, toks, poss) ->
+    (next_toks, lane_outs)`` where ``caches`` is the paged pool tree
+    (flat page stores for attention layers, slot-major state for
+    recurrent ones) and ``page_tables`` is ``(n_slots, pages_per_slot)``
+    int32.  Each lane gathers its pages into the *same contiguous
+    ``(H_kv, max_len, D)`` view* the slot pool hands
+    ``make_lane_step``'s lane, then runs the identical
+    ``lm.forward_cached`` — byte-for-byte the contiguous computation,
+    because every position past the lane's ``kv_len`` is masked to
+    exactly zero weight regardless of which garbage the unmapped
+    (scratch-page) gather rows carry.
+
+    ``lane_outs`` is per-layer: the newly-written KV token ``(H_kv, D)``
+    for attention layers (sliced back out of the lane's private view —
+    the caller scatters it into the shared page store *outside* the
+    vmap), the full new state for recurrent layers.
+    """
+    kinds = tuple(cfg.layer_kinds())
+    ps = int(page_size)
+
+    def lane(params, pt_row, caches, tok, pos):
+        idx = (pt_row[:, None] * ps
+               + jnp.arange(ps, dtype=pt_row.dtype)[None, :]
+               ).reshape(-1)[:max_len]
+
+        def view(kind, c):
+            if c is None:
+                return None
+            if kind in _ATTN_KINDS:
+                return jax.tree.map(
+                    lambda x: x[idx].transpose(1, 0, 2)[None], c)
+            return jax.tree.map(lambda x: x[None], c)
+
+        row = [view(kind, c) for kind, c in zip(kinds, caches,
+                                                strict=True)]
+        with flags.kernel_tuner(kernel_tuner or flags.KERNEL_TUNER):
+            logits, new = lm.forward_cached(
+                params, tok[None, None], row, pos, cfg, window=None)
+
+        def out(kind, c):
+            if c is None:
+                return None
+            if kind in _ATTN_KINDS:
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x[0], pos, 1, axis=1)[:, 0, :], c)
+            return jax.tree.map(lambda x: x[0], c)
+
+        outs = [out(kind, c) for kind, c in zip(kinds, new, strict=True)]
+        return jnp.argmax(logits[0, 0], axis=-1), outs
+
+    axes = [None if kind in _ATTN_KINDS else 0 for kind in kinds]
+    return jax.vmap(lane, in_axes=(None, 0, axes, 0, 0))
+
+
+def make_paged_decode_step(cfg: ArchConfig, *, page_size: int,
+                           max_len: int, kernel_tuner=None,
+                           max_depth: int = DEFAULT_MAX_DEPTH,
+                           cache_shardings=None,
+                           _inject_reshard: bool = False) -> Callable:
+    """Build the jitted fused decode step over a paged pool.
+
+    ``fused(params, caches, page_tables, toks, poss, steps)`` — same
+    contract as ``make_fused_decode_step`` with the page-table
+    indirection riding in as data (loop-invariant: the host resolves
+    allocation and copy-on-write *before* dispatch, so the table never
+    changes mid-loop).  The pool tree is **donated** at position 1,
+    exactly like the contiguous step, and per-iteration attention KV
+    lands via one scatter per layer into the flat page store: active
+    lanes write ``table[pos // ps] * ps + pos % ps``, inactive lanes
+    are routed to the scratch page's row 0 (their garbage is never
+    mapped by any table).
+    """
+    lanes = make_paged_lane_step(cfg, page_size=page_size,
+                                 max_len=max_len,
+                                 kernel_tuner=kernel_tuner)
+    kinds = tuple(cfg.layer_kinds())
+    ps = int(page_size)
+    max_depth = max(int(max_depth), 1)
+    reshard_to = _replicated_like(cache_shardings) \
+        if _inject_reshard and cache_shardings is not None else None
+
+    def fused(params, caches, page_tables, toks, poss, steps):
+        if cache_shardings is not None:
+            caches = jax.lax.with_sharding_constraint(caches,
+                                                      cache_shardings)
+        n = toks.shape[0]
+        out_buf = jnp.zeros((max_depth, n), jnp.int32)
+        lane_ix = jnp.arange(n)
+
+        def body(j, carry):
+            caches, toks, poss, rem, out_buf = carry
+            if reshard_to is not None:
+                caches = jax.lax.with_sharding_constraint(caches,
+                                                          reshard_to)
+            active = rem > 0
+            next_toks, outs = lanes(params, page_tables, caches, toks,
+                                    poss)
+            pages = page_tables[lane_ix, poss // ps]
+            flat_ix = jnp.where(active, pages * ps + poss % ps, 0)
+
+            def merge(kind, c, o):
+                if c is None:
+                    return None
+                if kind in _ATTN_KINDS:
+                    return jax.tree.map(
+                        lambda x, v: x.at[flat_ix].set(v.astype(x.dtype)),
+                        c, o)
+                return masked_merge(c, o, active)
+
+            caches = [merge(kind, c, o) for kind, c, o in
+                      zip(kinds, caches, outs, strict=True)]
+            toks = jnp.where(active, next_toks, toks)
+            out_buf = out_buf.at[j].set(toks)
+            step = active.astype(poss.dtype)
+            return caches, toks, poss + step, rem - step, out_buf
+
+        trip = jnp.minimum(jnp.max(steps), max_depth)
+        caches, toks, _, _, out_buf = jax.lax.fori_loop(
+            0, trip, body, (caches, toks, poss,
+                            jnp.minimum(steps, max_depth), out_buf))
+        return caches, out_buf, toks
+
+    return jax.jit(fused, donate_argnums=(1,))

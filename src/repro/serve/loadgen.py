@@ -44,21 +44,27 @@ class SLOModel:
 class TraceRequest:
     """One request in a trace: arrival offset (seconds from trace
     start), prompt/output lengths, and the absolute-offset deadline
-    (None: no SLO on this request)."""
+    (None: no SLO on this request).  ``prefix_len`` > 0 marks the first
+    that many prompt tokens as the trace's *shared system prompt*:
+    ``materialize`` gives every such request the identical token
+    content there, so a prefix-caching pool can recognise and reuse
+    it."""
 
     arrival_s: float
     prompt_len: int
     new_tokens: int
     deadline_s: float | None
+    prefix_len: int = 0
 
 
-def _finalize(arrivals, plens, news, slo: SLOModel | None
-              ) -> list[TraceRequest]:
+def _finalize(arrivals, plens, news, slo: SLOModel | None,
+              prefix_lens=None) -> list[TraceRequest]:
     out = []
-    for t, p, n in zip(arrivals, plens, news, strict=True):
+    pre = prefix_lens if prefix_lens is not None else [0] * len(arrivals)
+    for t, p, n, x in zip(arrivals, plens, news, pre, strict=True):
         p, n = int(max(p, 1)), int(max(n, 1))
         d = None if slo is None else float(t) + slo.deadline_offset(n)
-        out.append(TraceRequest(float(t), p, n, d))
+        out.append(TraceRequest(float(t), p, n, d, int(x)))
     return out
 
 
@@ -124,10 +130,39 @@ def heavy_tailed_trace(n: int, *, rate_rps: float,
     return _finalize(arrivals, plens, news, slo)
 
 
+def shared_prefix_trace(n: int, *, rate_rps: float, prefix_len: int = 24,
+                        shared_fraction: float = 0.9,
+                        median_suffix: int = 6, suffix_sigma: float = 0.7,
+                        max_suffix: int = 32,
+                        median_new: int = 8, new_sigma: float = 0.6,
+                        max_new: int = 32, seed: int = 0,
+                        slo: SLOModel | None = SLOModel()
+                        ) -> list[TraceRequest]:
+    """Poisson arrivals where a seeded ``shared_fraction`` of requests
+    open with the *same* hot system prompt (``prefix_len`` tokens,
+    identical content under ``materialize``) followed by a heavy-tailed
+    lognormal unique suffix — the chatbot / RAG shape where most of
+    every prompt's KV work is redundant across requests.  The workload
+    a paged pool with copy-on-write prefix reuse is built for: the
+    prefix is prefilled once, later requests map its pages read-only
+    and only pay for their suffix."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    shared = rng.random_sample(n) < shared_fraction
+    suffixes = np.clip(np.rint(rng.lognormal(
+        math.log(median_suffix), suffix_sigma, size=n)), 1, max_suffix)
+    plens = np.where(shared, prefix_len + suffixes, suffixes)
+    news = np.clip(np.rint(rng.lognormal(
+        math.log(median_new), new_sigma, size=n)), 1, max_new)
+    prefix_lens = np.where(shared, prefix_len, 0)
+    return _finalize(arrivals, plens, news, slo, prefix_lens)
+
+
 GENERATORS = {
     "poisson": poisson_trace,
     "bursty": bursty_trace,
     "heavy": heavy_tailed_trace,
+    "shared_prefix": shared_prefix_trace,
 }
 
 
@@ -135,10 +170,21 @@ def materialize(trace: list[TraceRequest], vocab: int, seed: int = 0
                 ) -> list[tuple[TraceRequest, np.ndarray]]:
     """Attach a seeded int32 prompt token array to every trace request
     (kept separate from generation so traces stay cheap to describe and
-    compare)."""
+    compare).  Requests with ``prefix_len > 0`` share one system-prompt
+    array (drawn once per call from the seed): identical head content
+    is what makes the paged pool's token-hash prefix lookup hit."""
     rng = np.random.RandomState(seed ^ 0x5EED)
-    return [(tr, rng.randint(0, vocab, size=tr.prompt_len)
-             .astype(np.int32)) for tr in trace]
+    max_pre = max((tr.prefix_len for tr in trace), default=0)
+    shared = np.random.RandomState(seed ^ 0x5AFE).randint(
+        0, vocab, size=max_pre).astype(np.int32) if max_pre else None
+    out = []
+    for tr in trace:
+        toks = rng.randint(0, vocab, size=tr.prompt_len - tr.prefix_len
+                           ).astype(np.int32)
+        if tr.prefix_len:
+            toks = np.concatenate([shared[:tr.prefix_len], toks])
+        out.append((tr, toks))
+    return out
 
 
 def trace_summary(trace: list[TraceRequest]) -> dict:
@@ -148,7 +194,12 @@ def trace_summary(trace: list[TraceRequest]) -> dict:
     plens = np.asarray([t.prompt_len for t in trace])
     news = np.asarray([t.new_tokens for t in trace])
     dur = float(arr[-1]) if len(arr) else 0.0
-    return {
+    pre = np.asarray([t.prefix_len for t in trace])
+    extra = {}
+    if pre.any():
+        extra = {"shared_prefix_requests": int((pre > 0).sum()),
+                 "shared_prefix_tokens": int(pre.sum())}
+    return extra | {
         "requests": len(trace),
         "duration_s": round(dur, 3),
         "mean_rate_rps": round(len(trace) / dur, 2) if dur else 0.0,

@@ -74,8 +74,11 @@ from ..core.properties import params_of
 from ..models import flags, lm
 from ..train.autotune import serve_profiles
 from .decode_loop import (DEFAULT_MAX_DEPTH, make_fused_decode_step,
-                          make_lane_step, masked_merge)
-from .kv_cache import SlotKVCachePool
+                          make_lane_step, make_paged_decode_step,
+                          masked_merge)
+from .kv_cache import PagedKVCachePool, SlotKVCachePool
+
+DEFAULT_PAGE_CANDIDATES = (8, 16, 32, 64)
 
 DEFAULT_CHUNK_BUCKETS = (8, 16, 32, 64, 128, 256)
 
@@ -136,6 +139,9 @@ class Request:
     pending_out: int = 0
     first_token_at: float | None = None
     finished_at: float | None = None
+    # Host-side prompt tokens, captured at submit() time (outside the
+    # strict-mode transfer guard) — the paged pool's prefix-cache key.
+    host_tokens: tuple | None = None
 
     @property
     def prompt_len(self) -> int:
@@ -179,7 +185,9 @@ class ServeScheduler:
                  max_dispatch_depth: int = DEFAULT_MAX_DEPTH,
                  pipeline: int = 2, sync_every: int = 8,
                  admission: str = "greedy",
-                 shed_expired: bool = False, mesh=None):
+                 shed_expired: bool = False, mesh=None,
+                 paged: bool = False, page_size: int | str = "auto",
+                 prefill_interleave: int | str = "auto"):
         kinds = set(cfg.layer_kinds())
         if "cross_attn" in kinds:
             raise ValueError(
@@ -226,8 +234,6 @@ class ServeScheduler:
                 cfg, mesh, params, n_slots, max_len)
             self.params = jax.device_put(params, pshard)
         self.slots_per_replica = n_slots // self.n_replicas
-        self.pool = SlotKVCachePool(cfg, n_slots, max_len,
-                                    window=self.window, mesh=mesh)
         self.clock = clock
         self.chunk_buckets = tuple(sorted(set(int(b) for b in chunk_buckets
                                               if b > 0))) or (max_len,)
@@ -244,6 +250,59 @@ class ServeScheduler:
         sig = (cfg.name, cfg.d_model, cfg.n_layers)
         self.prefill_key = ("serve_prefill",) + sig
         self.decode_key = ("serve_decode",) + sig
+        # Paged KV pool (kv_cache.PagedKVCachePool): memory layout as an
+        # ExecutionModel decision.  The page size is decided at
+        # construction (``serve_page_size`` — geometry is baked into the
+        # compiled steps), seeded analytically from whatever the store
+        # already knows and re-decided on timed syncs as the run observes
+        # real page-management and prefill costs; the refined choice
+        # drives the *next* pool this store backs.  The prefill/decode
+        # interleave ratio (``serve_prefill_interleave``) is decided per
+        # tick — see ``_decide_interleave``.
+        self.paged = bool(paged)
+        self.page_size_key = DecisionKey("serve_page_size", sig)
+        self.interleave_key = DecisionKey("serve_prefill_interleave", sig)
+        self.page_mgmt_key = ("serve_page_mgmt",) + sig
+        if isinstance(prefill_interleave, str):
+            if prefill_interleave != "auto":
+                raise ValueError(
+                    f"prefill_interleave must be an int or 'auto'; "
+                    f"got {prefill_interleave!r}")
+        else:
+            prefill_interleave = max(int(prefill_interleave), 1)
+        self.prefill_interleave = prefill_interleave
+        # Decode lanes stalled on prefill: cumulative seconds the tick
+        # blocked on prefill chunks while decode lanes were active with
+        # no fused dispatch in flight to hide behind — the number the
+        # interleave decision minimises (benchmarks/serve_throughput.py
+        # surfaces it per tick).
+        self.prefill_stall_s = 0.0
+        self._last_depth = 0
+        self._page_size_auto = paged and page_size == "auto"
+        if self.paged:
+            if dispatch_depth is None:
+                raise ValueError(
+                    "paged serving requires the fused decode path: "
+                    "pass dispatch_depth (an int or 'auto')")
+            if isinstance(page_size, str):
+                if page_size != "auto":
+                    raise ValueError(
+                        f"page_size must be an int or 'auto'; "
+                        f"got {page_size!r}")
+                ps = self._decide_page_size()
+            else:
+                ps = max(int(page_size), 1)
+                model = self.decision_model()
+                if model is not None:
+                    model.note(self.page_size_key,
+                               policy="fixed-page-size", cores=1,
+                               chunk=ps, inputs=(("fixed", True),))
+            self.pool: Any = PagedKVCachePool(
+                cfg, n_slots, max_len, window=self.window,
+                page_size=ps, mesh=mesh)
+        else:
+            self.pool = SlotKVCachePool(cfg, n_slots, max_len,
+                                        window=self.window, mesh=mesh)
         # Engine key for the per-tick decision: every tick's width/chunk
         # choice lands in the shared ExecutionModel trace under this key
         # (--explain-decisions attributes serve ticks through it).
@@ -350,6 +409,14 @@ class ServeScheduler:
                       max_new_tokens=max(int(max_new_tokens), 1),
                       arrival=self.clock() if arrival is None else arrival,
                       deadline=deadline)
+        if self.paged and getattr(self.pool, "prefix_cache", False):
+            # Prefix-cache key, captured here — outside the tick's
+            # strict-mode transfer guard (submit is the sanctioned spot
+            # for a prompt to touch the host).
+            import numpy as np
+
+            req.host_tokens = tuple(
+                int(t) for t in np.asarray(tokens))
         self.requests[rid] = req
         self._waiting.append(req)
         return rid
@@ -424,8 +491,9 @@ class ServeScheduler:
             # One compile serves every depth (dynamic trip count); the
             # zero-step call donates and returns the pool unchanged.
             self._tok_overrides[0] = 0   # compile the override splice
+            pt = (self.pool.page_table_array(),) if self.paged else ()
             new_caches, out_buf, toks = self._fused_step()(
-                self.params, self.pool.caches, self._decode_toks(),
+                self.params, self.pool.caches, *pt, self._decode_toks(),
                 self.pool.positions_array(),
                 jnp.zeros(self.pool.n_slots, jnp.int32))
             self.pool.mark_donated("fused decode warmup")
@@ -441,7 +509,7 @@ class ServeScheduler:
                 jnp.zeros(self.pool.n_slots, dtype=bool))
             self._warm_decode = True
         if self._pad_ok:
-            warmed = None
+            warmed, warm_b = None, 0
             for b in self.chunk_buckets:
                 if b < self.max_len:
                     row = self.pool.read_slot(0)
@@ -449,6 +517,7 @@ class ServeScheduler:
                         self.params, row, jnp.zeros((1, b), jnp.int32),
                         jnp.int32(0), jnp.int32(b - 1))
                     self._warm_prefill.add(b)
+                    warm_b = b
             if warmed is not None:
                 # Slot 0 is free here (warmup precedes admission) and
                 # masking hides the garbage row: writing it back
@@ -456,7 +525,12 @@ class ServeScheduler:
                 # argmax the real prefill path goes through.
                 logits, new_row = warmed
                 int(jnp.argmax(logits[0, 0]))
-                self.pool.write_slot(0, new_row)
+                if self.paged:
+                    # Unmapped table → the garbage row scatters into the
+                    # scratch page; compiles the ranged page write.
+                    self.pool.write_slot(0, new_row, 0, warm_b)
+                else:
+                    self.pool.write_slot(0, new_row)
 
     # ----------------------------------------------------------------- tick
     def tick(self) -> TickRecord:
@@ -522,14 +596,27 @@ class ServeScheduler:
         admitted = self._admit()
         pf_pending = any(r.state is RequestState.PREFILL
                          for r in self._active)
+        n_dec = sum(1 for r in self._active
+                    if r.state is RequestState.DECODE)
         if pf_pending:
             queued, cores, chunk = self._decide()
+            if self.paged and n_dec:
+                # Chunked-prefill interleave: cap this tick's prefill
+                # chunk-ops to what fits the window the in-flight fused
+                # decode keeps the device busy (``serve_prefill_interleave``).
+                cores = min(cores, self._decide_interleave(chunk))
+            pre_blocked = self._blocked_s
             prefill_ops, pf_finished = self._run_prefill(cores, chunk)
+            if n_dec and not self._inflight:
+                # Decode lanes sat idle while these chunks ran — nothing
+                # was in flight to hide the prefill behind.  This is the
+                # stall the interleave decision minimises.
+                self.prefill_stall_s += max(
+                    self._blocked_s - pre_blocked, 0.0)
         else:
             # Decode-only tick: skip the prefill width/chunk query — on
             # the fused hot path those engine calls are host overhead.
-            queued = sum(1 for r in self._active
-                         if r.state is RequestState.DECODE)
+            queued = n_dec
             cores, chunk = 0, 0
             prefill_ops, pf_finished = [], []
         decoded, dec_finished, depth = self._dispatch_decode()
@@ -584,7 +671,14 @@ class ServeScheduler:
                 and (width is None or len(admitted) < width) \
                 and (lane_cap is None or len(self._active) < lane_cap):
             req = self._waiting.pop(0)
-            req.slot = self.pool.acquire(req.rid)
+            if self.paged and req.host_tokens is not None:
+                # Map any cached prefix of the prompt read-only into the
+                # slot's page table; prefill resumes past it.
+                req.slot, reused = self.pool.acquire_with_prefix(
+                    req.rid, req.host_tokens)
+                req.prefilled = reused
+            else:
+                req.slot = self.pool.acquire(req.rid)
             req.state = RequestState.PREFILL
             self._active.append(req)
             admitted.append(req.rid)
@@ -770,6 +864,20 @@ class ServeScheduler:
                 padded = step    # no room to pad: exact-size chunk
             ops.append((req, step, padded))
 
+        if self.paged:
+            # Page management is the ``serve_page_size`` decision's T0:
+            # allocate/CoW the pages this wave will write, timed and fed
+            # back (``serve_page_mgmt``) so the next pool's page size is
+            # decided from measured cost, not the analytic prior.
+            t_pg = time.perf_counter()
+            for req, _, padded in ops:
+                self.pool.ensure_writable(
+                    req.slot, req.prefilled, req.prefilled + padded)
+            model = self.decision_model()
+            if model is not None:
+                model.observe(self.page_mgmt_key, len(ops),
+                              max(time.perf_counter() - t_pg, 0.0))
+
         pool, params = self.pool, self.params
 
         def run_chunk(chunk: Chunk):
@@ -802,9 +910,16 @@ class ServeScheduler:
         # Cache writes and state transitions happen on the caller's
         # thread, after the join — chunk thunks never mutate the pool.
         prefill_ops, finished = [], []
-        for (req, step, _), (logits, new_row) in zip(ops, outs,
-                                                     strict=True):
-            self.pool.write_slot(req.slot, new_row)
+        for (req, step, padded), (logits, new_row) in zip(ops, outs,
+                                                          strict=True):
+            if self.paged:
+                # Scatter only the freshly-computed range into the
+                # slot's pages: rows before ``prefilled`` may belong to
+                # a shared (read-only) prefix.
+                self.pool.write_slot(req.slot, new_row, req.prefilled,
+                                     req.prefilled + padded)
+            else:
+                self.pool.write_slot(req.slot, new_row)
             req.prefilled += step
             self.pool.positions[req.slot] = req.prefilled
             prefill_ops.append((req.rid, step))
@@ -817,6 +932,11 @@ class ServeScheduler:
                 req.out.append(tok)
                 req.first_token_at = self.clock()
                 req.state = RequestState.DECODE
+                if self.paged and req.host_tokens is not None:
+                    # Publish the freshly-prefilled prompt's pages into
+                    # the prefix cache (refcounted, shared read-only;
+                    # the slot's own next write CoW-copies the tail).
+                    self.pool.register_prefix(req.slot, req.host_tokens)
                 if len(req.out) >= req.max_new_tokens:
                     self._finish(req)
                     finished.append(req.rid)
@@ -891,11 +1011,19 @@ class ServeScheduler:
     # -- decode (fused path) -------------------------------------------------
     def _fused_step(self):
         if self._fused_jit is None:
-            self._fused_jit = make_fused_decode_step(
-                self.cfg, window=self.window,
-                kernel_tuner=self.kernel_tuner,
-                max_depth=self.max_dispatch_depth,
-                cache_shardings=self.pool.shardings)
+            if self.paged:
+                self._fused_jit = make_paged_decode_step(
+                    self.cfg, page_size=self.pool.page_size,
+                    max_len=self.max_len,
+                    kernel_tuner=self.kernel_tuner,
+                    max_depth=self.max_dispatch_depth,
+                    cache_shardings=self.pool.shardings)
+            else:
+                self._fused_jit = make_fused_decode_step(
+                    self.cfg, window=self.window,
+                    kernel_tuner=self.kernel_tuner,
+                    max_depth=self.max_dispatch_depth,
+                    cache_shardings=self.pool.shardings)
         return self._fused_jit
 
     def decode_cost_analysis(self) -> dict | None:
@@ -912,7 +1040,12 @@ class ServeScheduler:
         toks = jnp.zeros(n, jnp.int32)
         poss = self.pool.positions_array()
         try:
-            if self._fused:
+            if self._fused and self.paged:
+                lowered = self._fused_step().lower(
+                    self.params, self.pool.caches,
+                    self.pool.page_table_array(), toks, poss,
+                    jnp.zeros(n, jnp.int32))
+            elif self._fused:
                 lowered = self._fused_step().lower(
                     self.params, self.pool.caches, toks, poss,
                     jnp.zeros(n, jnp.int32))
@@ -992,6 +1125,78 @@ class ServeScheduler:
             evidence=tuple(evidence), inputs=inputs)
         return decision.chunk
 
+    def _decide_page_size(self) -> int:
+        """Construction-time ``serve_page_size`` decision: the page size
+        minimising the Overhead-Law cost of the paged pool —
+        per-request page management (measured ``serve_page_mgmt``, paid
+        ``max_len / ps`` times) against half a page of wasted prefill
+        per prompt tail (priced at the online-refined ``serve_prefill``
+        t_iter).  Analytic on a cold store; once this process has
+        observed real page-management waves the re-decisions on timed
+        syncs carry online provenance, and the refined choice drives
+        the next pool built over the same store."""
+        model = self.decision_model()
+        if model is None:
+            return 16
+        mgmt = model.smoothed_t_iter(self.page_mgmt_key) or 0.0
+        pf = model.smoothed_t_iter(self.prefill_key)
+        inputs: tuple = ()
+        if pf is None:
+            pf = self.acc.measure_iteration(
+                self.executor, self.prefill_profile, self.max_len,
+                key=self.prefill_key)
+            inputs = (("seeded", True),)
+        decision = model.page_size(
+            self.page_size_key, candidates=DEFAULT_PAGE_CANDIDATES,
+            max_len=self.max_len, page_mgmt_s=mgmt,
+            prefill_token_s=pf or 0.0,
+            evidence=(self.page_mgmt_key, self.prefill_key),
+            inputs=inputs)
+        return decision.chunk
+
+    def _decide_interleave(self, chunk: int) -> int:
+        """Per-tick ``serve_prefill_interleave`` decision: how many
+        prefill chunk-ops fit the window the in-flight fused decode
+        keeps the device busy.  The window is the online-refined fused
+        per-token time × the last dispatch depth × the active decode
+        lanes; one chunk costs the online-refined prefill t_iter × the
+        decided chunk.  More chunks than fit stall the decode lanes
+        (``prefill_stall_s``); fewer starve admission."""
+        ready = sum(1 for r in self._active
+                    if r.state is RequestState.PREFILL)
+        cap = max(ready, 1)
+        if self.prefill_interleave != "auto":
+            r = min(int(self.prefill_interleave), cap)
+            model = self.decision_model()
+            if model is not None:
+                model.note(self.interleave_key, policy="fixed-interleave",
+                           cores=1, chunk=max(r, 1),
+                           inputs=(("fixed", True),))
+            return max(r, 1)
+        model = self.decision_model()
+        if model is None:
+            return cap
+        n_dec = sum(1 for r in self._active
+                    if r.state is RequestState.DECODE)
+        dev = model.smoothed_t_iter(self.fused_key) or 0.0
+        window = dev * max(self._last_depth, 1) * max(n_dec, 1)
+        t_pf = model.smoothed_t_iter(self.prefill_key)
+        inputs: tuple = (("depth", self._last_depth), ("lanes", n_dec))
+        if t_pf is None:
+            t_pf = self.acc.measure_iteration(
+                self.executor, self.prefill_profile, max(chunk, 1),
+                key=self.prefill_key)
+            inputs += (("seeded", True),)
+        decision = model.prefill_interleave(
+            self.interleave_key, pending_chunks=ready,
+            decode_window_s=window,
+            chunk_cost_s=max(t_pf or 0.0, 0.0) * max(chunk, 1),
+            max_chunks=self.pool.n_slots,
+            evidence=(self.fused_key, self.prefill_key,
+                      self.host_tick_key),
+            inputs=inputs)
+        return decision.chunk
+
     def _dispatch_decode(self):
         """Dispatch one fused decode step (no sync): every DECODE slot
         advances by up to the decided depth, clamped to its remaining
@@ -1001,6 +1206,7 @@ class ServeScheduler:
         if not decs:
             return [], [], 0
         depth = self._decide_depth(decs)
+        self._last_depth = depth
         steps = [0] * self.pool.n_slots
         lanes = []
         for r in decs:
@@ -1009,6 +1215,19 @@ class ServeScheduler:
             take = min(depth, budget)
             steps[r.slot] = take
             lanes.append((r, r.slot, take))
+        if self.paged:
+            # CoW/allocation must land before the dispatch reads the
+            # pool, and the table upload after — the loop body's gather
+            # indirection is exactly this tick's host-resolved mapping.
+            t_pg = time.perf_counter()
+            for _, slot, take in lanes:
+                if take:
+                    pos = self.pool.positions[slot]
+                    self.pool.ensure_writable(slot, pos, pos + take)
+            model = self.decision_model()
+            if model is not None:
+                model.observe(self.page_mgmt_key, len(lanes),
+                              max(time.perf_counter() - t_pg, 0.0))
         toks_a = self._decode_toks()
         poss_a = self.pool.positions_array()
         steps_a = jnp.asarray(steps, jnp.int32)
@@ -1020,8 +1239,9 @@ class ServeScheduler:
         if timed:
             self._drain(drop_to=0)
         t_dev = time.perf_counter()
+        pt = (self.pool.page_table_array(),) if self.paged else ()
         new_caches, out_buf, final_toks = fused(
-            self.params, self.pool.caches, toks_a, poss_a, steps_a)
+            self.params, self.pool.caches, *pt, toks_a, poss_a, steps_a)
         self.pool.mark_donated("fused decode dispatch")
         total = sum(take for _, _, take in lanes)
         if timed:
@@ -1034,6 +1254,13 @@ class ServeScheduler:
             model = self.decision_model()
             if model is not None and total > 0:
                 model.observe(self.fused_key, total, dt)
+            if self.paged and self._page_size_auto:
+                # Re-decide with whatever page-management and prefill
+                # costs the run has observed by now: the trace shows the
+                # layout decision upgrading analytic → online, and the
+                # refined size drives the next pool over this store
+                # (geometry is compiled in — it cannot change mid-run).
+                self._decide_page_size()
         self._warm_fused = True
         self.pool.adopt(new_caches)
         self._dev_toks = final_toks

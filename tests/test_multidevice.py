@@ -196,12 +196,59 @@ print("MESH_SERVE_OK")
 """
 
 
+PAGED_MESH_SERVE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_config
+from repro.core.acc import AdaptiveCoreChunk
+from repro.core.adaptive import adaptive
+from repro.core.executor import SequentialExecutor
+from repro.data import make_batch
+from repro.launch.mesh import make_serve_mesh
+from repro.models import lm
+from repro.serve import ServeScheduler
+
+# The paged pool on a 4x2 mesh must not move a single argmax vs the
+# contiguous single-device fused path: page-table indirection and the
+# 'data'-replicated page stores are pure layout.
+cfg = get_config("qwen3-0.6b").reduced()
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+tokens = make_batch(cfg, 3, 14, kind="prefill", seed=11)["tokens"]
+spec = [(14, 9), (9, 3), (6, 7)]
+
+def run(depth, paged, mesh=None, n_slots=2):
+    sched = ServeScheduler(
+        cfg, params, n_slots=n_slots, max_len=48,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=depth, mesh=mesh, paged=paged)
+    sched.warmup()
+    rids = [sched.submit(tokens[i][:p], max_new_tokens=n)
+            for i, (p, n) in enumerate(spec)]
+    outs = sched.run_until_idle()
+    assert sched.pool.allocations == 1, "donation invariant broke"
+    return [outs[r] for r in rids], sched
+
+mesh = make_serve_mesh(4, 2)
+for k in (1, 4):
+    ref, _ = run(k, paged=False)
+    got_single, _ = run(k, paged=True)
+    assert got_single == ref, ("single", k)
+    got_mesh, sched = run(k, paged=True, mesh=mesh, n_slots=4)
+    assert got_mesh == ref, ("mesh", k)
+    assert sched.decision_model().trace.entries("serve_page_size"), \
+        "paged mesh run made no serve_page_size decisions"
+print("PAGED_MESH_SERVE_OK")
+"""
+
+
 @pytest.mark.parametrize("name,code,marker", [
     ("mesh_algorithms", MESH_ALGOS, "MESH_OK"),
     ("compressed_dp", COMPRESSED_DP, "COMPRESS_OK"),
     ("elastic", ELASTIC, "ELASTIC_OK"),
     ("dryrun_small", DRYRUN_SMALL, "DRYRUN_SMALL_OK"),
     ("mesh_serve", MESH_SERVE, "MESH_SERVE_OK"),
+    ("paged_mesh_serve", PAGED_MESH_SERVE, "PAGED_MESH_SERVE_OK"),
 ])
 def test_multidevice(subproc, name, code, marker):
     r = subproc(code, n_devices=8)

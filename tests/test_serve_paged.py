@@ -1,0 +1,351 @@
+"""Paged KV cache: byte-identity against the contiguous pool, paged
+flash-attention over permuted page tables, copy-on-write / refcount
+invariants under random op interleavings, stale-page poisoning, and the
+``serve_page_size`` / ``serve_prefill_interleave`` decision kinds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SequentialExecutor, adaptive, strict
+from repro.core.acc import AdaptiveCoreChunk
+from repro.data import make_batch
+from repro.models import init_params
+from repro.serve import RequestState, ServeScheduler
+from repro.serve.kv_cache import PagedKVCachePool
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def make_sched(cfg, params, *, paged, depth="auto", n_slots=2,
+               max_len=48, **kw):
+    return ServeScheduler(
+        cfg, params, n_slots=n_slots, max_len=max_len,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=depth, paged=paged, **kw)
+
+
+def run_spec(sched, tokens, spec):
+    sched.warmup()
+    rids = [sched.submit(tokens[i][:p], max_new_tokens=n)
+            for i, (p, n) in enumerate(spec)]
+    outs = sched.run_until_idle()
+    return [outs[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# byte identity: paged fused decode vs the contiguous pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 4])
+def test_paged_tokens_identical_to_contiguous(setup, depth):
+    cfg, params = setup
+    tokens = make_batch(cfg, 3, 14, kind="prefill", seed=11)["tokens"]
+    spec = [(14, 9), (9, 3), (6, 7)]
+    ref = run_spec(make_sched(cfg, params, paged=False, depth=depth),
+                   tokens, spec)
+    sched = make_sched(cfg, params, paged=True, depth=depth, page_size=8)
+    got = run_spec(sched, tokens, spec)
+    assert got == ref
+    assert sched.pool.allocations == 1, "donation invariant broke"
+
+
+def test_prefix_reuse_does_not_change_tokens(setup):
+    """Identical prompts resubmitted: later requests map the first's
+    pages read-only — the hit rate goes up, the tokens do not move (the
+    end-to-end proof that shared prefix pages are never mutated)."""
+    cfg, params = setup
+    prompt = make_batch(cfg, 1, 23, kind="prefill", seed=3)["tokens"][0]
+    ref_sched = make_sched(cfg, params, paged=False)
+    ref_sched.warmup()
+    r = ref_sched.submit(prompt, max_new_tokens=6)
+    ref = ref_sched.run_until_idle()[r]
+
+    sched = make_sched(cfg, params, paged=True, page_size=8)
+    sched.warmup()
+    outs = []
+    for _ in range(3):
+        rid = sched.submit(prompt, max_new_tokens=6)
+        outs.append(sched.run_until_idle()[rid])
+        sched.clear_finished()
+    assert outs == [ref, ref, ref]
+    stats = sched.pool.prefix_stats()
+    assert stats["prefix_hits"] >= 2
+    assert stats["prefill_tokens_avoided"] > 0
+
+
+# ---------------------------------------------------------------------------
+# kernel: paged attention over a permuted page table
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _paged_attention_case(seed, sq):
+    """Randomly permuted page table, garbage in unused rows: the paged
+    kernel must be byte-identical to the contiguous flash kernel with
+    ``block_kv == page_size`` (same tile schedule, different DMA
+    addressing)."""
+    from repro.kernels.flash_attention import (flash_attention_pallas,
+                                               paged_flash_attention_pallas)
+    B, HQ, HKV, D, PS, MAX_LEN = 2, 2, 1, 8, 8, 32
+    nblk = MAX_LEN // PS
+    n_pages = 1 + B * nblk
+    rng = np.random.RandomState(seed)
+    kv_lens = rng.randint(sq, MAX_LEN + 1, size=B).astype(np.int32)
+    q = jnp.asarray(rng.randn(B, HQ, sq, D), jnp.float32)
+    k_full = rng.randn(B, HKV, MAX_LEN, D).astype(np.float32)
+    v_full = rng.randn(B, HKV, MAX_LEN, D).astype(np.float32)
+    pt = rng.permutation(np.arange(1, n_pages)) \
+        .reshape(B, nblk).astype(np.int32)
+    # Flat token-major stores; rows past each lane's kv_len hold finite
+    # garbage (the pool's unwritten-page state) that must not leak.
+    k_pages = np.full((n_pages * PS, HKV, D), 7.5e4, np.float32)
+    v_pages = np.full((n_pages * PS, HKV, D), 7.5e4, np.float32)
+    k_pages[:PS] = v_pages[:PS] = 0.0
+    for b in range(B):
+        for j in range(nblk):
+            lo, hi = j * PS, min((j + 1) * PS, int(kv_lens[b]))
+            if hi <= lo:
+                continue
+            rows = slice(pt[b, j] * PS, pt[b, j] * PS + (hi - lo))
+            k_pages[rows] = k_full[b, :, lo:hi].transpose(1, 0, 2)
+            v_pages[rows] = v_full[b, :, lo:hi].transpose(1, 0, 2)
+    got = paged_flash_attention_pallas(
+        q, jnp.asarray(k_pages), jnp.asarray(v_pages),
+        jnp.asarray(pt), jnp.asarray(kv_lens), page_size=PS)
+    for b in range(B):
+        length = int(kv_lens[b])
+        kb = jnp.asarray(k_full[b:b + 1]).at[:, :, length:].set(0.0)
+        vb = jnp.asarray(v_full[b:b + 1]).at[:, :, length:].set(0.0)
+        ref = flash_attention_pallas(
+            q[b:b + 1], kb, vb, causal=True, kv_len=length,
+            block_q=sq, block_kv=PS)
+        assert jnp.all(got[b:b + 1] == ref), (b, seed, sq)
+
+
+@pytest.mark.parametrize("sq", [1, 4])
+def test_paged_attention_matches_contiguous(sq):
+    for seed in (0, 17, 2**31 - 5):
+        _paged_attention_case(seed, sq)
+
+
+# ---------------------------------------------------------------------------
+# refcount / CoW invariants under random interleavings
+# ---------------------------------------------------------------------------
+
+def _rows(cfg, rng, seg):
+    """A batch-of-1 prefill-shaped row pytree covering ``seg`` tokens."""
+    h, d = cfg.n_kv_heads, cfg.head_dim_
+    return [{"k": jnp.asarray(rng.randn(1, h, seg, d), jnp.float32),
+             "v": jnp.asarray(rng.randn(1, h, seg, d), jnp.float32)}
+            for _ in cfg.layer_kinds()]
+
+
+def _check_refcounts(pool):
+    """Every page's refcount equals the references the host actually
+    holds: page-table entries plus prefix-cache entries (page 0 is
+    pinned by construction and never enters the free list)."""
+    expected = [0] * pool.n_pages
+    expected[0] = 1
+    for slot in range(pool.n_slots):
+        for pid in pool.page_tables[slot]:
+            if pid:
+                expected[pid] += 1
+    for entry in pool._prefix.values():
+        expected[entry.page] += 1
+    assert pool.page_refs == expected, (pool.page_refs, expected)
+    free = set(pool._free_pages)
+    assert 0 not in free
+    for pid in range(1, pool.n_pages):
+        assert (pool.page_refs[pid] == 0) == (pid in free), pid
+    # Memory is bounded by pages, not by slots: one device allocation,
+    # live pages within the fixed pool.
+    assert pool.allocations == 1
+    assert pool.pages_in_use() <= pool.n_pages - 1
+
+
+def _cow_case(cfg, ops, seed):
+    rng = np.random.RandomState(seed)
+    pool = PagedKVCachePool(cfg, 3, 32, page_size=8)
+    base = tuple(int(t) for t in rng.randint(0, cfg.vocab_size, 20))
+    prompts = [base, base[:16] + tuple((t + 1) % cfg.vocab_size
+                                       for t in base[16:]), base[:9]]
+    snapshots = {}      # prefix key -> layer-0 K rows at registration
+    live = {}           # slot -> prompt tokens
+
+    def snapshot(pid):
+        ps = pool.page_size
+        return np.asarray(pool.caches[0]["k"][pid * ps:(pid + 1) * ps])
+
+    for op, which, arg in ops:
+        if op == 0 and pool.free_slots():          # admit with prefix
+            toks = prompts[which]
+            slot, reused = pool.acquire_with_prefix(f"r{arg}", toks)
+            assert reused < len(toks)
+            live[slot] = toks
+        elif op == 1 and live:                     # prefill + publish
+            slot = sorted(live)[which % len(live)]
+            toks = live[slot]
+            start = pool.positions[slot]
+            if start < len(toks):
+                pool.ensure_writable(slot, start, len(toks))
+                pool.write_slot(slot, _rows(cfg, rng, len(toks) - start),
+                                start, len(toks))
+                pool.positions[slot] = len(toks)
+                pool.register_prefix(slot, toks)
+                for j in range(-(-len(toks) // pool.page_size)):
+                    end = min((j + 1) * pool.page_size, len(toks))
+                    key = toks[:end]
+                    if key in pool._prefix and key not in snapshots:
+                        snapshots[key] = snapshot(pool._prefix[key].page)
+        elif op == 2 and live:                     # decode one token
+            slot = sorted(live)[which % len(live)]
+            pos = pool.positions[slot]
+            if pos < pool.max_len:
+                pool.ensure_writable(slot, pos, pos + 1)
+                # Post-CoW exclusivity: every page under the write is
+                # now referenced once — shared content cannot be hit.
+                for j in range(pos // pool.page_size,
+                               -(-(pos + 1) // pool.page_size)):
+                    pid = pool.page_tables[slot][j]
+                    assert pool.page_refs[pid] == 1
+                pool.write_slot(slot, _rows(cfg, rng, 1), pos, pos + 1)
+                pool.positions[slot] = pos + 1
+        elif op == 3 and live:                     # fork CoW
+            src = sorted(live)[which % len(live)]
+            slot = pool.fork(src, f"f{arg}")
+            if slot is not None:
+                live[slot] = live[src]
+        elif op == 4 and live:                     # release
+            slot = sorted(live)[which % len(live)]
+            pool.release(slot)
+            del live[slot]
+        _check_refcounts(pool)
+
+    # Registered prefix pages were never mutated, whatever interleaving
+    # of admits, writes, forks and releases ran above.
+    for key, snap in snapshots.items():
+        entry = pool._prefix.get(key)
+        if entry is None:
+            continue        # evicted for space — nothing left to check
+        np.testing.assert_array_equal(snapshot(entry.page), snap, str(key))
+
+
+def test_cow_refcount_invariants(setup):
+    """Fixed-seed random interleavings of admit / prefill+publish /
+    decode-write / fork / release (the hypothesis sweep below explores
+    further when the library is present)."""
+    cfg, _ = setup
+    for seed in (0, 7, 91):
+        rng = np.random.RandomState(seed * 31 + 5)
+        ops = [(int(rng.randint(0, 5)), int(rng.randint(0, 3)),
+                int(rng.randint(0, 2**16))) for _ in range(22)]
+        _cow_case(cfg, ops, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1), sq=st.sampled_from([1, 4]))
+    @settings(max_examples=10, deadline=None)
+    def test_paged_attention_matches_contiguous_property(seed, sq):
+        _paged_attention_case(seed, sq)
+
+    @given(ops=st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2),
+                                  st.integers(0, 2**16)),
+                        min_size=1, max_size=25),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=12, deadline=None)
+    def test_cow_refcount_invariants_property(setup, ops, seed):
+        cfg, _ = setup
+        _cow_case(cfg, ops, seed)
+
+
+# ---------------------------------------------------------------------------
+# strict mode: freed pages poison until re-acquired
+# ---------------------------------------------------------------------------
+
+def test_stale_page_raises_under_strict(setup):
+    cfg, _ = setup
+    pool = PagedKVCachePool(cfg, 2, 32, page_size=8)
+    s1 = pool.acquire("a")
+    s2 = pool.acquire("b")
+    pool.ensure_writable(s1, 0, 8)
+    pool.ensure_writable(s2, 0, 8)
+    freed = pool.page_tables[s2][0]
+    pool.release(s2)                 # page freed -> poisoned
+    assert freed in pool._poisoned
+    pool.page_tables[s1][1] = freed  # simulate a stale-table bug
+    with pytest.raises(strict.StalePageError):
+        pool.page_table_array()
+    # Re-acquisition clears the poison: the page is valid again.
+    pool.page_tables[s1][1] = 0
+    pool.ensure_writable(s1, 8, 16)
+    assert pool.page_tables[s1][1] not in pool._poisoned
+    pool.page_table_array()
+
+
+def test_cow_source_pages_survive_release(setup):
+    """Releasing a slot whose pages the prefix cache still references
+    must NOT free them (refcount, not ownership, decides)."""
+    cfg, _ = setup
+    pool = PagedKVCachePool(cfg, 2, 32, page_size=8)
+    toks = tuple(range(16))
+    slot, reused = pool.acquire_with_prefix("a", toks)
+    assert reused == 0
+    pool.ensure_writable(slot, 0, 16)
+    pool.positions[slot] = 16
+    pool.register_prefix(slot, toks)
+    pages = [pool.page_tables[slot][j] for j in range(2)]
+    pool.release(slot)
+    for pid in pages:
+        assert pool.page_refs[pid] == 1      # cache still holds them
+        assert pid not in pool._poisoned
+    slot2, reused2 = pool.acquire_with_prefix("b", toks + (1, 2))
+    assert reused2 == 16
+    assert [pool.page_tables[slot2][j] for j in range(2)] == pages
+
+
+# ---------------------------------------------------------------------------
+# the two new decision kinds
+# ---------------------------------------------------------------------------
+
+def test_page_size_and_interleave_decisions(setup):
+    cfg, params = setup
+    # depth=1 keeps r1 decoding one token per tick, so the second
+    # request's prefill demonstrably lands while a decode lane is live.
+    sched = make_sched(cfg, params, paged=True, depth=1, n_slots=2,
+                       max_len=48)
+    sched.warmup()
+    model = sched.decision_model()
+    assert model.trace.entries("serve_page_size"), \
+        "page geometry was not decided through the ExecutionModel"
+    prompt = make_batch(cfg, 1, 12, kind="prefill", seed=5)["tokens"][0]
+    r1 = sched.submit(prompt, max_new_tokens=16)
+    # Tick until r1 is decoding, then land a second prefill on top: the
+    # interleave decision must gate how many chunks ride the tick.
+    for _ in range(20):
+        sched.tick()
+        if sched.requests[r1].state is RequestState.DECODE:
+            break
+    sched.submit(prompt[:8], max_new_tokens=4)
+    for _ in range(40):
+        if not sched.pending:
+            break
+        sched.tick()
+    sched.results()
+    entries = model.trace.entries("serve_prefill_interleave")
+    assert entries, "no serve_prefill_interleave decisions were traced"
+    prov = {e.decision.provenance for e in
+            model.trace.entries("serve_page_size")}
+    assert prov, prov
