@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 import json
 import os
 import sys
@@ -60,7 +61,8 @@ from repro.core.adaptive import adaptive  # noqa: E402
 from repro.core.executor import SequentialExecutor  # noqa: E402
 from repro.core.hardware import TPU_V5E  # noqa: E402
 from repro.models import lm  # noqa: E402
-from repro.serve import ServeScheduler, percentile  # noqa: E402
+from repro.serve import (ServeScheduler, materialize,  # noqa: E402
+                         percentile, templated_trace, trace_summary)
 
 # Mesh smoke guard floor: host-emulated devices
 # (--xla_force_host_platform_device_count) time-share ONE cpu, so the
@@ -86,6 +88,15 @@ MESH_SMOKE_FLOOR = 0.05
 # benchmarks/load_harness.py on the shared_prefix trace.
 PAGED_SMOKE_FLOOR = 0.25
 
+# Speculative smoke guard target: on the templated (motif-tiled,
+# high n-gram self-overlap) trace the prompt-lookup drafter gets real
+# acceptance, so speculative-adaptive must deliver at least this
+# multiple of the non-speculative fused run's tokens/s — and its
+# serve_spec_depth decisions must reach online provenance (the
+# acceptance EMA actually fed back).  Low-overlap traces are guarded in
+# benchmarks/load_harness.py (backoff keeps spec within 0.95x there).
+SPEC_SMOKE_TARGET = 1.2
+
 
 def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
                     prompt_lens: tuple[int, ...], new_tokens: int,
@@ -107,11 +118,11 @@ def synthetic_trace(n_requests: int, *, mean_interarrival_s: float,
 
 def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
                max_len: int, dispatch_depth=None, mesh=None,
-               paged=False):
+               paged=False, speculate=None):
     sched = ServeScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
                            executor=adaptive(SequentialExecutor(), policy),
                            dispatch_depth=dispatch_depth, mesh=mesh,
-                           paged=paged)
+                           paged=paged, speculate=speculate)
     sched.warmup()
     # Untimed steady-state warm: one request per distinct prompt length
     # compiles every shape-dependent host op (token slice / pad per
@@ -130,12 +141,15 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
     sched.host_overhead_s = 0.0
     sched.decode_loop_iters = 0
     sched.prefill_stall_s = 0.0
+    sched.spec_verifies = sched.spec_emitted = sched.spec_rounds = 0
     # Snapshot the engine trace so the report covers only the timed
     # replay's depth decisions, not the warm phase's seeded ones.
     model = sched.decision_model()
     depth_seen = len(model.trace.entries("serve_dispatch_depth")) \
         if model is not None else 0
     mesh_seen = len(model.trace.entries("serve_mesh_batch")) \
+        if model is not None else 0
+    spec_seen = len(model.trace.entries("serve_spec_depth")) \
         if model is not None else 0
 
     t0 = time.monotonic()
@@ -210,6 +224,23 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
         report["mesh_provenance"] = sorted(
             {e.decision.provenance for e in entries})
         report["mesh_trace"] = [e.decision.explain() for e in entries[-6:]]
+    if speculate is not None:
+        st = sched.spec_stats()
+        report["speculate"] = {
+            "mode": str(speculate),
+            "final_depth": st["depth"],
+            "verifies": st["verifies"],
+            "emitted": st["emitted"],
+            "tokens_per_verify": round(st["tokens_per_verify"], 3),
+            "acceptance_rate": round(st["acceptance_rate"], 4),
+        }
+        if model is not None:
+            entries = model.trace.entries("serve_spec_depth")[spec_seen:]
+            report["spec_decisions"] = len(entries)
+            report["spec_provenance"] = sorted(
+                {e.decision.provenance for e in entries})
+            report["spec_trace"] = [e.decision.explain()
+                                    for e in entries[-4:]]
     # Achieved per-device rates from the decode step's XLA cost analysis
     # (analysis/roofline.py).  cost_analysis counts a fori_loop body
     # ONCE, so the figures are per loop iteration per device — the
@@ -249,6 +280,12 @@ def run_policy(name: str, policy, cfg, params, trace, *, n_slots: int,
               f"({dm['hbm_bw_utilization_tpu_v5e']:.2e} of v5e bw) | "
               f"{dm['n_devices']} device(s) x "
               f"{dm['decode_loop_iters']} decode iters")
+    sp = report.get("speculate")
+    if sp:
+        print(f"  {'':9s} spec depth={sp['final_depth']} "
+              f"{sp['tokens_per_verify']:.2f} tok/verify "
+              f"(acceptance {sp['acceptance_rate']:.0%}) | provenance "
+              f"{report.get('spec_provenance')}")
     return report, sched
 
 
@@ -323,13 +360,75 @@ def main() -> int:
         return round(a["tokens_per_s"] / b["tokens_per_s"], 3) \
             if b["tokens_per_s"] else float("nan")
 
+    # Speculative section: fused-adaptive with and without
+    # self-speculation, replaying a *templated* trace
+    # (loadgen.templated_trace: motif-tiled prompts with high n-gram
+    # self-overlap) where the prompt-lookup drafter gets real
+    # acceptance.  The delta isolates what speculation buys; the random
+    # traces above stay speculation-free so the other ratios are
+    # unchanged.  The section runs speculation's home configuration —
+    # a SINGLE decode lane (latency-bound serving, no batch to fill the
+    # width; one lane also makes loop rounds equal per-lane verifies,
+    # so the tokens-per-verify win is not diluted by the max() over
+    # lanes) on a model a step up from reduced(): with 2 layers at
+    # d_model 64 the per-round fixed costs (draft gather, history
+    # shift, write-out) dominate the forward and drown the win, while
+    # at 4 layers x d_model 128 the step is weight-bound and the wider
+    # verify rides the same weight stream.  Generation long enough for
+    # the drafter's bigram table to lock onto the motif cycle.
+    spec_cfg = dataclasses.replace(cfg, n_layers=4, d_model=128,
+                                   d_ff=256, head_dim=32)
+    spec_params = lm.init_params(jax.random.PRNGKey(0), spec_cfg)
+    spec_new = 128
+    spec_reqs = templated_trace(
+        n_requests, rate_rps=200.0, motif_len=6, median_prompt=16,
+        prompt_sigma=0.3, max_prompt=32, median_new=spec_new,
+        new_sigma=0.0, max_new=spec_new, seed=args.seed, slo=None)
+    spec_mat = materialize(spec_reqs, spec_cfg.vocab_size, seed=args.seed)
+    spec_trace = [(tr.arrival_s, toks, tr.new_tokens)
+                  for tr, toks in spec_mat]
+    # Headroom for the reserved draft margin (the last spec_d - 1 cache
+    # positions are unusable under speculation — scheduler docstring).
+    spec_max_len = max(tr.prompt_len + tr.new_tokens
+                       for tr in spec_reqs) + 9
+    print(f"templated trace (speculation section): "
+          f"{trace_summary(spec_reqs)}")
+    specoff_rep, _ = run_policy(
+        "spec-off", AdaptiveCoreChunk(), spec_cfg, spec_params, spec_trace,
+        n_slots=1, max_len=spec_max_len, dispatch_depth=12)
+    spec_rep, _ = run_policy(
+        "spec-auto", AdaptiveCoreChunk(), spec_cfg, spec_params, spec_trace,
+        n_slots=1, max_len=spec_max_len, dispatch_depth=12,
+        speculate="auto")
+
     fused_over_per_tick = ratio(fused_rep, per_tick_rep)
     adaptive_over_static = ratio(fused_rep, static_rep)
+    spec_over_non_spec = ratio(spec_rep, specoff_rep)
     blob = {"adaptive": fused_rep, "per_tick": per_tick_rep,
             "static": static_rep,
             "fused_over_per_tick": fused_over_per_tick,
             "adaptive_over_static": adaptive_over_static,
+            "speculative": {
+                "templated_trace": trace_summary(spec_reqs),
+                "spec_off": specoff_rep,
+                "spec_auto": spec_rep,
+                "spec_over_non_spec": spec_over_non_spec,
+            },
             "smoke": bool(args.smoke)}
+    print(f"  spec-auto/spec-off on templated trace: "
+          f"{spec_over_non_spec:.2f}x")
+    spec_ok = True
+    if args.smoke:
+        if spec_over_non_spec < SPEC_SMOKE_TARGET:
+            print(f"FAIL: speculative-adaptive {spec_over_non_spec:.2f}x "
+                  f"non-speculative on the templated trace (target "
+                  f"{SPEC_SMOKE_TARGET}x) — speculation regression")
+            spec_ok = False
+        if "online" not in spec_rep.get("spec_provenance", []):
+            print("FAIL: serve_spec_depth decisions never reached online "
+                  "provenance during the timed replay: "
+                  f"{spec_rep.get('spec_provenance')}")
+            spec_ok = False
 
     paged_ok = True
     if paged_rep is not None:
@@ -410,7 +509,7 @@ def main() -> int:
               f"({adaptive_over_static:.2f}x) — dispatch-granularity "
               "regression")
         return 1
-    if not mesh_ok or not paged_ok:
+    if not mesh_ok or not paged_ok or not spec_ok:
         return 1
     if not args.smoke and fused_over_per_tick < 1.3:
         print("WARNING: fused decode below the 1.3x target over the "

@@ -248,9 +248,19 @@ def audit_scheduler(sched, *, inject_reshard: bool = False,
         step = sched._fused_step()
     n = sched.pool.n_slots
     pt = (sched.pool.page_table_array(),) if paged else ()
-    lowered = step.lower(
-        sched.params, sched.pool.caches, *pt, jnp.zeros(n, jnp.int32),
-        sched.pool.positions_array(), jnp.zeros(n, jnp.int32))
+    spec_d = sched._spec_depth if getattr(sched, "_spec", False) else 1
+    if spec_d >= 2 and not inject_reshard:
+        # Speculative draft/verify step: same donation and loop-body
+        # discipline as the plain fused step, plus the history ring —
+        # audited with the live depth's compiled executable.
+        lowered = sched._spec_step(spec_d).lower(
+            sched.params, sched.pool.caches, *pt, sched._decode_hist(),
+            jnp.zeros(n, jnp.int32), sched.pool.positions_array(),
+            jnp.zeros(n, jnp.int32))
+    else:
+        lowered = step.lower(
+            sched.params, sched.pool.caches, *pt, jnp.zeros(n, jnp.int32),
+            sched.pool.positions_array(), jnp.zeros(n, jnp.int32))
     model_parallel = 1
     if sched.mesh is not None:
         model_parallel = int(dict(sched.mesh.shape).get("model", 1))
@@ -292,6 +302,11 @@ def main(argv=None) -> int:
                     help="audit the paged fused step (page-table "
                          "gathers + flat-store scatters in the body)")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="audit the speculative draft/verify step at "
+                         "this width instead of the plain fused step "
+                         "(0 = off; incompatible with "
+                         "--inject-reshard)")
     ap.add_argument("--inject-reshard", action="store_true",
                     help="deliberately reshard the pool inside the loop "
                          "body (the audit must then FAIL — gate "
@@ -322,7 +337,8 @@ def main(argv=None) -> int:
         cfg, params, n_slots=args.slots, max_len=args.max_len,
         executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
         dispatch_depth=args.depth, mesh=mesh,
-        paged=args.paged, page_size=args.page_size)
+        paged=args.paged, page_size=args.page_size,
+        speculate=args.speculate if args.speculate >= 2 else None)
     # The paged store is replicated over 'data' (prefix sharing — see
     # launch/sharding.paged_cache_specs), so the plan predicts one
     # all-gather of the per-step lane updates: (slots, Hkv_shard, D)

@@ -56,10 +56,13 @@ class LintConfig:
     are the fused tick, the decode-loop module, and the front end's
     token pump; ``donating_factories`` names the call surfaces that
     return donated-argument jits (``make_fused_decode_step`` /
-    ``make_paged_decode_step`` and the scheduler's ``_fused_step`` /
-    ``_paged_step`` accessors all donate the cache pool at positional
-    index 1 — the paged step's page tables at index 2 are deliberately
-    *not* donated).  Tests override these to lint micro-fixtures.
+    ``make_paged_decode_step`` / the speculative
+    ``make_spec_decode_step`` / ``make_paged_spec_decode_step`` and the
+    scheduler's ``_fused_step`` / ``_paged_step`` / ``_spec_step``
+    accessors all donate the cache pool at positional index 1 — the
+    paged steps' page tables and the speculative steps' history ring
+    are deliberately *not* donated).  Tests override these to lint
+    micro-fixtures.
     """
 
     select: frozenset[str] | None = None      # None = all rules
@@ -70,8 +73,11 @@ class LintConfig:
         dataclasses.field(default_factory=lambda: {
             "make_fused_decode_step": (1,),
             "make_paged_decode_step": (1,),
+            "make_spec_decode_step": (1,),
+            "make_paged_spec_decode_step": (1,),
             "_fused_step": (1,),
             "_paged_step": (1,),
+            "_spec_step": (1,),
         })
 
     def wants(self, code: str) -> bool:

@@ -55,6 +55,20 @@ from . import overhead_law
 from .calibration import DEFAULT_SMOOTHING, CalibrationCache
 from .overhead_law import AccDecision
 
+# Self-speculative decoding priors (the ``serve_spec_depth`` decision).
+# The acceptance prior seeds the analytic decision before any verify has
+# drained; the width cost is the marginal fraction of a fixed decode
+# step one extra verify position costs.  On a weight-streaming-bound
+# accelerator that marginal is nearly free (the extra position rides the
+# same weight reads); on a dispatch-overhead-bound host the draft /
+# emit / history bookkeeping is a real per-round tax — the prior sits
+# at the conservative end so the argmax only widens the verify when
+# acceptance genuinely pays for it.  Below the backoff floor
+# speculation is disabled outright.
+DEFAULT_SPEC_ACCEPT = 0.5
+DEFAULT_SPEC_WIDTH_COST = 0.25
+MIN_SPEC_ACCEPT = 0.05
+
 # Provenance levels, weakest to strongest.  A decision's provenance says
 # what class of evidence backed it: a closed-form estimate, a one-shot
 # measurement, or a continuously-refined online observation.
@@ -742,6 +756,96 @@ class ExecutionModel:
                     ("decode_window_s", decode_window_s),
                     ("chunk_cost_s", chunk_cost_s),
                     ("max_chunks", max_chunks)) + tuple(inputs)))
+
+    def spec_depth(self, key: DecisionKey | Hashable, *,
+                   candidates: Sequence[int], accept_rate: float,
+                   step_s: float = 0.0,
+                   width_cost: float = DEFAULT_SPEC_WIDTH_COST,
+                   min_accept: float = MIN_SPEC_ACCEPT,
+                   max_depth: int = 8,
+                   current: int | None = None,
+                   evidence: Sequence[Hashable] = (),
+                   inputs: tuple = ()) -> Decision:
+        """Speculation depth for a self-speculative fused decode loop
+        (decision kind ``serve_spec_depth``): how many positions one
+        draft-and-verify round should carry.
+
+        This is the Overhead Law applied to the *model itself*, and the
+        engine's first stochastic decision input: every verify round
+        pays a fixed cost (the weight-streaming-bound decode step — the
+        round's ``T0``) whether it emits one token or ``d``, and
+        widening the verify by a draft costs only ``width_cost`` of
+        that fixed step (the batch dim rides the same weight reads).
+        With per-draft acceptance rate ``a``, a round of depth ``d``
+        emits the longest matching prefix plus the corrected token:
+
+            E(d, a)   = 1 + a + a^2 + ... + a^(d-1)   (expected tokens)
+            cost(d)   = 1 + width_cost * (d - 1)      (relative round)
+            score(d)  = E(d, a) / cost(d)             (tokens per round)
+
+        and the pick is the argmax over the candidate set — ``d = 1``
+        (speculation off) wins by construction whenever acceptance
+        cannot pay the verify width, and is *forced* when the EMA'd
+        acceptance collapses below ``min_accept`` (adaptive backoff:
+        drafting noise must not tax the steady state).  ``accept_rate``
+        is expected to come from the drain-time ``serve_spec_accept``
+        EMA (analytic prior before any spec dispatch has drained);
+        ``step_s`` is contextual (the measured per-round seconds behind
+        the throughput claim, recorded for ``--explain-decisions``).
+
+        ``current`` enables one-step hysteresis: acceptance observed at
+        depth ``d`` is censored at ``d - 1`` accepted drafts, so a
+        saturated reading (every draft accepted) says nothing about how
+        much *deeper* runs would fare — extrapolating the geometric
+        E(d, a) several ladder rungs up routinely overshoots, then
+        crashes to backoff when the wider width's real acceptance lands.
+        With ``current`` set, the pick moves at most one candidate rung
+        per decision (collapse backoff still drops straight to 1), so
+        each widening is validated by a drain at the new width before
+        the next.  Provenance follows ``evidence``.  The chosen depth
+        rides in ``chunk``.
+        """
+        dkey = DecisionKey.wrap(key)
+        prior: AnalyticOverheadLaw = self.policies["prior"]
+        max_depth = max(int(max_depth), 1)
+        cands = sorted({min(max(int(c), 1), max_depth)
+                        for c in candidates} | {1})
+        a = min(max(float(accept_rate), 0.0), 0.999)
+        backoff = a < min_accept
+        if backoff:
+            depth = 1
+            scores = ()
+        else:
+            scored = [(sum(a ** i for i in range(c))
+                       / (1.0 + width_cost * (c - 1)), c)
+                      for c in cands]
+            # max() prefers the shallower depth on exact ties (the
+            # cheaper compile and smaller rollback window).
+            depth = max(scored, key=lambda sc: (sc[0], -sc[1]))[1]
+            scores = tuple((c, round(s, 6)) for s, c in scored)
+            if current is not None:
+                cur = min(max(int(current), 1), max_depth)
+                ci = max(i for i, c in enumerate(cands) if c <= cur)
+                pi = cands.index(depth)
+                ni = ci + (1 if pi > ci else -1 if pi < ci else 0)
+                if cands[ni] != depth:
+                    inputs = (("unclamped", depth),) + tuple(inputs)
+                    depth = cands[ni]
+        provenance = self.provenance_of(dkey)
+        for ekey in evidence:
+            provenance = provenance_max(provenance,
+                                        self.provenance_of(ekey))
+        return self._finish(Decision(
+            key=dkey, policy=prior.name, provenance=provenance,
+            cores=1, chunk=depth,
+            inputs=(("accept_rate", round(a, 4)),
+                    ("width_cost", width_cost),
+                    ("step_s", step_s),
+                    ("backoff", backoff),
+                    ("candidates", tuple(cands)),
+                    ("scores", scores))
+            + (() if current is None else (("current", int(current)),))
+            + tuple(inputs)))
 
     def default_cores_chunk(self, count: int, max_cores: int) -> AccDecision:
         """The customization-point *default* decision (paper: "splits the

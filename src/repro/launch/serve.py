@@ -175,6 +175,15 @@ def main() -> None:
                     help="max prefill chunk-ops interleaved per fused "
                          "decode tick: 'auto' (serve_prefill_interleave "
                          "engine decision, default) or an integer")
+    ap.add_argument("--speculate", default="off",
+                    help="self-speculative decoding inside the fused "
+                         "loop (n-gram prompt-lookup drafts, one "
+                         "batched verify, device-side rollback): 'auto' "
+                         "(adaptive serve_spec_depth decision with "
+                         "backoff when acceptance collapses), an "
+                         "integer draft window, or 'off' (default).  "
+                         "Requires a fused --dispatch-depth; output is "
+                         "byte-identical to non-speculative decoding")
     ap.add_argument("--explain-decisions", action="store_true",
                     help="dump the ExecutionModel decision trace: every "
                          "serve-tick, admission and kernel-block choice "
@@ -260,15 +269,25 @@ def main() -> None:
     page_size = "auto" if page_size == "auto" else int(page_size)
     interleave = args.prefill_interleave.strip().lower()
     interleave = "auto" if interleave == "auto" else int(interleave)
+    speculate = args.speculate.strip().lower()
+    speculate = None if speculate in ("off", "none", "0") else \
+        speculate if speculate == "auto" else int(speculate)
     sched = ServeScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
                            executor=executor, kernel_tuner=tuner,
                            dispatch_depth=depth, admission=admission,
                            mesh=mesh, paged=args.paged,
                            page_size=page_size,
-                           prefill_interleave=interleave)
+                           prefill_interleave=interleave,
+                           speculate=speculate)
     sched.warmup()
 
     def print_paged_stats():
+        if sched._spec:
+            st = sched.spec_stats()
+            print(f"speculate: depth={st['depth']} "
+                  f"verifies={st['verifies']} emitted={st['emitted']} | "
+                  f"{st['tokens_per_verify']:.2f} tok/verify "
+                  f"(acceptance {st['acceptance_rate']:.1%})")
         if not args.paged:
             return
         st = sched.pool.prefix_stats()

@@ -251,13 +251,17 @@ def _layer_params(params, cfg: ArchConfig, layer: int):
 
 def forward_cached(params: dict, tokens: jax.Array, caches: list, pos,
                    cfg: ArchConfig, *, window: int | None = None,
-                   frontend_feats=None, logit_index=None
+                   frontend_feats=None, logit_index=None,
+                   all_logits: bool = False
                    ) -> tuple[jax.Array, list]:
     """tokens: (B, L_new); caches: per-layer state list; pos: scalar count
     of tokens already cached.  Returns (logits of one position, caches):
     the last position by default, or ``logit_index`` (int or traced
     scalar) — the serving scheduler pads prefill chunks to a bucketed
-    length and needs the logits of the last *real* token."""
+    length and needs the logits of the last *real* token.  With
+    ``all_logits`` the head runs over every fed position (``(B, L_new,
+    V)``) — the speculative verify needs the model's prediction after
+    each draft token in one batched forward."""
     cd = jnp.dtype(cfg.compute_dtype)
     window = window if window is not None else cfg.attn_window
     x = flags.constrain(cm.embed(params["embed"], tokens, cd))
@@ -274,7 +278,9 @@ def forward_cached(params: dict, tokens: jax.Array, caches: list, pos,
             cache=caches[layer], cache_pos=pos)
         x = flags.constrain(x)
         new_caches.append(nc)
-    if logit_index is None:
+    if all_logits:
+        xs = x
+    elif logit_index is None:
         xs = x[:, -1:]
     else:
         xs = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)

@@ -242,6 +242,23 @@ class SlotKVCachePool:
         self.positions[slot] = pos
         return pos
 
+    def rollback(self, slot: int, n: int) -> int:
+        """Roll ``slot``'s position back by ``n`` tokens (speculative
+        decode: drafts past the accept point are rejected).  Rows at and
+        past the rolled-back position become dead storage — the causal
+        mask never attends a position at or past the query's own, and
+        the next decode write starts at the rolled-back position and
+        covers the stale extent — so no device work is needed, only the
+        position bookkeeping."""
+        if n < 0:
+            raise ValueError(f"negative rollback: {n}")
+        if n > self.positions[slot]:
+            raise ValueError(
+                f"rollback of {n} past slot {slot}'s position "
+                f"{self.positions[slot]}")
+        self.positions[slot] -= n
+        return self.positions[slot]
+
     def positions_array(self) -> jax.Array:
         """Per-slot positions as an (n_slots,) int32 device array (free
         slots report 0; their decode lanes are ignored)."""
@@ -804,6 +821,38 @@ class PagedKVCachePool:
             raise SlotOverflowError(slot, pos, self.max_len)
         self.positions[slot] = pos
         return pos
+
+    def rollback(self, slot: int, n: int) -> int:
+        """Roll ``slot``'s position back by ``n`` tokens — page-refcount
+        safe by construction: the dispatch's ``ensure_writable`` covered
+        the whole speculative window before any device write, so every
+        page touching the rolled-back range is exclusively owned by this
+        slot (refcount 1) and *stays mapped* — its stale rows are dead
+        storage the causal mask never reads and the next decode write
+        overwrites.  No page is freed or unmapped here: unmapping would
+        strand the window's allocation work, and freeing a page that a
+        concurrent prefix registration might share is exactly the
+        use-after-free class this pool's strict-mode validation hunts.
+        Raises if a shared page covers the range (the caller skipped
+        ``ensure_writable`` — a hard bug, not a recoverable state)."""
+        if n < 0:
+            raise ValueError(f"negative rollback: {n}")
+        pos = self.positions[slot]
+        if n > pos:
+            raise ValueError(
+                f"rollback of {n} past slot {slot}'s position {pos}")
+        ps = self.page_size
+        table = self.page_tables[slot]
+        for j in range((pos - n) // ps, -(-pos // ps)):
+            pid = table[j]
+            if pid and self.page_refs[pid] > 1:
+                raise ValueError(
+                    f"rollback range [{pos - n}, {pos}) of slot {slot} "
+                    f"touches shared page {pid} (refcount "
+                    f"{self.page_refs[pid]}): the dispatch skipped "
+                    f"ensure_writable over its speculative window")
+        self.positions[slot] = pos - n
+        return self.positions[slot]
 
     def positions_array(self) -> jax.Array:
         return jnp.asarray(

@@ -15,6 +15,9 @@ exact same load and the comparison is apples-to-apples.
   requests are orders of magnitude longer than the median, the regime
   real LM serving lives in (and the acceptance trace for this repo's
   front end).
+* ``templated_trace``    — motif-tiled prompts with high n-gram
+  self-overlap: the structured-output shape where a prompt-lookup
+  speculative drafter earns its keep.
 
 Every request carries an SLO deadline derived from an ``SLOModel``
 (TTFT allowance plus a per-token inter-token budget — longer answers
@@ -55,16 +58,23 @@ class TraceRequest:
     new_tokens: int
     deadline_s: float | None
     prefix_len: int = 0
+    # ``motif_len`` > 0 marks a *templated* prompt: ``materialize``
+    # builds it by tiling a seeded per-request motif of that length, so
+    # the token stream has high n-gram self-overlap — the regime where
+    # a prompt-lookup speculative drafter gets real acceptance.
+    motif_len: int = 0
 
 
 def _finalize(arrivals, plens, news, slo: SLOModel | None,
-              prefix_lens=None) -> list[TraceRequest]:
+              prefix_lens=None, motif_lens=None) -> list[TraceRequest]:
     out = []
     pre = prefix_lens if prefix_lens is not None else [0] * len(arrivals)
-    for t, p, n, x in zip(arrivals, plens, news, pre, strict=True):
+    mot = motif_lens if motif_lens is not None else [0] * len(arrivals)
+    for t, p, n, x, m in zip(arrivals, plens, news, pre, mot,
+                             strict=True):
         p, n = int(max(p, 1)), int(max(n, 1))
         d = None if slo is None else float(t) + slo.deadline_offset(n)
-        out.append(TraceRequest(float(t), p, n, d, int(x)))
+        out.append(TraceRequest(float(t), p, n, d, int(x), int(m)))
     return out
 
 
@@ -158,11 +168,38 @@ def shared_prefix_trace(n: int, *, rate_rps: float, prefix_len: int = 24,
     return _finalize(arrivals, plens, news, slo, prefix_lens)
 
 
+def templated_trace(n: int, *, rate_rps: float, motif_len: int = 8,
+                    median_prompt: int = 24, prompt_sigma: float = 0.4,
+                    max_prompt: int = 96,
+                    median_new: int = 12, new_sigma: float = 0.5,
+                    max_new: int = 48, seed: int = 0,
+                    slo: SLOModel | None = SLOModel()
+                    ) -> list[TraceRequest]:
+    """Poisson arrivals whose prompts are *templated*: each is a seeded
+    ``motif_len``-token motif tiled out to the prompt length (see
+    ``materialize``), giving the token stream high n-gram self-overlap.
+    Greedy continuations of such prompts keep cycling the motif, so a
+    prompt-lookup speculative drafter sees real acceptance — the trace
+    the ``--speculate`` harness measures its win on (structured
+    form-filling / code-completion-like load, as opposed to the
+    near-zero-overlap random-token traces above)."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    plens = np.clip(np.rint(rng.lognormal(
+        math.log(median_prompt), prompt_sigma, size=n)),
+        max(motif_len, 1), max_prompt)
+    news = np.clip(np.rint(rng.lognormal(
+        math.log(median_new), new_sigma, size=n)), 1, max_new)
+    motifs = np.full(n, max(int(motif_len), 1))
+    return _finalize(arrivals, plens, news, slo, motif_lens=motifs)
+
+
 GENERATORS = {
     "poisson": poisson_trace,
     "bursty": bursty_trace,
     "heavy": heavy_tailed_trace,
     "shared_prefix": shared_prefix_trace,
+    "templated": templated_trace,
 }
 
 
@@ -179,6 +216,14 @@ def materialize(trace: list[TraceRequest], vocab: int, seed: int = 0
         0, vocab, size=max_pre).astype(np.int32) if max_pre else None
     out = []
     for tr in trace:
+        if tr.motif_len:
+            # Templated prompt: a per-request seeded motif tiled to the
+            # prompt length (same (trace, seed) → same tokens contract).
+            motif = rng.randint(0, vocab, size=tr.motif_len)
+            reps = -(-tr.prompt_len // tr.motif_len)
+            toks = np.tile(motif, reps)[:tr.prompt_len].astype(np.int32)
+            out.append((tr, toks))
+            continue
         toks = rng.randint(0, vocab, size=tr.prompt_len - tr.prefix_len
                            ).astype(np.int32)
         if tr.prefix_len:
@@ -199,6 +244,9 @@ def trace_summary(trace: list[TraceRequest]) -> dict:
     if pre.any():
         extra = {"shared_prefix_requests": int((pre > 0).sum()),
                  "shared_prefix_tokens": int(pre.sum())}
+    mot = np.asarray([t.motif_len for t in trace])
+    if mot.any():
+        extra |= {"templated_requests": int((mot > 0).sum())}
     return extra | {
         "requests": len(trace),
         "duration_s": round(dur, 3),

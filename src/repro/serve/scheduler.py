@@ -68,19 +68,29 @@ from ..core.acc import AdaptiveCoreChunk
 from ..core.executor import Chunk, SequentialExecutor
 from ..core.feedback import tag_workload
 from ..core.future import Future, when_all
-from ..core.model import (DecisionKey, ExecutionModel, decision_overhead_s,
-                          hardware_key)
+from ..core.model import (DEFAULT_SPEC_ACCEPT, DecisionKey, ExecutionModel,
+                          decision_overhead_s, hardware_key)
 from ..core.properties import params_of
 from ..models import flags, lm
 from ..train.autotune import serve_profiles
-from .decode_loop import (DEFAULT_MAX_DEPTH, make_fused_decode_step,
-                          make_lane_step, make_paged_decode_step,
-                          masked_merge)
+from .decode_loop import (DEFAULT_MAX_DEPTH, DEFAULT_SPEC_HISTORY,
+                          SPEC_DEPTH_CANDIDATES, _check_spec_arch,
+                          make_fused_decode_step, make_lane_step,
+                          make_paged_decode_step, make_paged_spec_decode_step,
+                          make_spec_decode_step, masked_merge)
 from .kv_cache import PagedKVCachePool, SlotKVCachePool
 
 DEFAULT_PAGE_CANDIDATES = (8, 16, 32, 64)
 
 DEFAULT_CHUNK_BUCKETS = (8, 16, 32, 64, 128, 256)
+
+# Under ``speculate="auto"``, depth 1 would be absorbing: no spec
+# dispatches run, so the acceptance EMA can never move and the decision
+# can never climb back.  Every this-many dispatches while parked at
+# depth 1, one window runs at width 2 as an exploration probe — it
+# refreshes the acceptance EMA at a bounded tax (one wider verify per
+# SPEC_PROBE_EVERY windows) and is byte-identical like any spec step.
+SPEC_PROBE_EVERY = 16
 
 
 class PromptTooLongError(ValueError):
@@ -170,6 +180,14 @@ class TickRecord:
     # the waiting-queue depth left after this tick's admission.
     deadline_misses: int = 0
     queue_depth: int = 0
+    # Variable tokens-per-dispatch accounting: ``depth`` is the decided
+    # per-lane budget, but under speculation a loop round emits a
+    # variable accepted-token count, so the total tokens this tick's
+    # dispatch carried is recorded explicitly instead of being inferred
+    # as lanes × depth.  ``spec_depth`` is the speculation width the
+    # dispatch ran with (0: speculation off).
+    dispatched_tokens: int = 0
+    spec_depth: int = 0
 
 
 class ServeScheduler:
@@ -187,7 +205,10 @@ class ServeScheduler:
                  admission: str = "greedy",
                  shed_expired: bool = False, mesh=None,
                  paged: bool = False, page_size: int | str = "auto",
-                 prefill_interleave: int | str = "auto"):
+                 prefill_interleave: int | str = "auto",
+                 speculate: int | str | None = None,
+                 max_spec_depth: int = 8,
+                 spec_history: int = DEFAULT_SPEC_HISTORY):
         kinds = set(cfg.layer_kinds())
         if "cross_attn" in kinds:
             raise ValueError(
@@ -324,6 +345,56 @@ class ServeScheduler:
         self.pipeline = max(int(pipeline), 1)
         self.sync_every = max(int(sync_every), 1)
         self.depth_key = DecisionKey("serve_dispatch_depth", sig)
+        # Self-speculative decoding (decode_loop.make_spec_decode_step):
+        # ``speculate`` is None (off), an int (fixed draft window), or
+        # "auto" (decision kind ``serve_spec_depth`` — analytic prior
+        # from the overhead law's accept-vs-verify-cost trade, refined
+        # online from the acceptance rate observed at drain time, with
+        # backoff to depth 1 when acceptance collapses).  Speculation
+        # rides the fused path; rollback of rejected drafts is pure
+        # position bookkeeping only under position-masked attention, so
+        # _check_spec_arch gates out SWA rings and recurrent state.
+        if isinstance(speculate, str):
+            if speculate != "auto":
+                raise ValueError(
+                    f"speculate must be None, an int, or 'auto'; "
+                    f"got {speculate!r}")
+        elif speculate is not None:
+            speculate = max(int(speculate), 1)
+        self.speculate = speculate
+        self._spec = speculate is not None
+        if self._spec:
+            if dispatch_depth is None:
+                raise ValueError(
+                    "speculative decoding rides the fused decode path: "
+                    "pass dispatch_depth (an int or 'auto')")
+            _check_spec_arch(cfg, self.window)
+        self.max_spec_depth = max(int(max_spec_depth), 1)
+        self.spec_history = max(int(spec_history), 8)
+        self.spec_depth_key = DecisionKey("serve_spec_depth", sig)
+        # Acceptance EMA: each drained spec dispatch contributes the
+        # acceptance rate recovered at *its own* width (elems=verifies,
+        # "seconds"=accept × verifies, so the refiner's per-element
+        # ratio is the acceptance itself — floored at 1e-3 through
+        # total-rejection stretches so the sample still records); plus
+        # seconds per speculative loop round, the depth decision's cost
+        # input.
+        self.spec_accept_key = ("serve_spec_accept",) + sig
+        self.spec_step_key = ("serve_spec_step",) + sig
+        # Clean width-1 per-iteration seconds (non-speculative timed
+        # dispatches only; ``fused_key`` is per-token and keeps being
+        # observed under speculation for the window decisions).  The
+        # ratio spec_step / fused_iter prices the verify width online —
+        # the depth decision's width_cost stops being a static prior as
+        # soon as both EMAs hold samples.
+        self.fused_iter_key = ("serve_fused_iter",) + sig
+        self._spec_jit: dict[int, Any] = {}
+        self._dev_hist = None       # device-resident token-history ring
+        self._hist_overrides: dict[int, list[int]] = {}
+        self.spec_verifies = 0      # per-lane verify events drained
+        self.spec_emitted = 0       # tokens emitted by speculative steps
+        self.spec_rounds = 0        # speculative loop rounds drained
+        self._spec_depth = 1
         # Admission policy: "greedy" fills every free slot (the pre-SLO
         # behaviour, what the deterministic trace tests pin); "adaptive"
         # makes the width a ``serve_admission`` engine decision from the
@@ -360,6 +431,10 @@ class ServeScheduler:
         self.fused_key = ("serve_decode_fused",) + sig
         self._fused_jit = None
         self._warm_fused = False
+        # Compiled fused-step variants ("fused" or ("spec", d)) that have
+        # executed at least once — the timed-sync guard checks membership
+        # so a cold compile is never recorded as dispatch time.
+        self._warm_steps: set = set()
         self._dev_toks = None       # device-resident last-token carry
         self._tok_overrides: dict[int, int] = {}
         # In-flight fused dispatches: (out_buf, [(req, slot, take)...]).
@@ -389,6 +464,8 @@ class ServeScheduler:
         # as t_iter (it would seed — and persist — a poisoned EMA).
         self._warm_prefill: set[int] = set()
         self._warm_decode = False
+        if self._spec:
+            self._spec_depth = self._decide_spec_depth()
 
     # ------------------------------------------------------------------ API
     def submit(self, tokens, max_new_tokens: int = 16, *,
@@ -409,10 +486,11 @@ class ServeScheduler:
                       max_new_tokens=max(int(max_new_tokens), 1),
                       arrival=self.clock() if arrival is None else arrival,
                       deadline=deadline)
-        if self.paged and getattr(self.pool, "prefix_cache", False):
-            # Prefix-cache key, captured here — outside the tick's
-            # strict-mode transfer guard (submit is the sanctioned spot
-            # for a prompt to touch the host).
+        if self._spec or (self.paged
+                          and getattr(self.pool, "prefix_cache", False)):
+            # Prefix-cache key / speculation history seed, captured here
+            # — outside the tick's strict-mode transfer guard (submit is
+            # the sanctioned spot for a prompt to touch the host).
             import numpy as np
 
             req.host_tokens = tuple(
@@ -446,6 +524,7 @@ class ServeScheduler:
                 # token carry — the slot may belong to someone else by
                 # then.
                 self._tok_overrides.pop(req.slot, None)
+                self._hist_overrides.pop(req.slot, None)
                 self.pool.release(req.slot)
                 req.slot = None
         req.state = RequestState.CANCELLED
@@ -489,17 +568,47 @@ class ServeScheduler:
         compute, not compilation."""
         if self._fused:
             # One compile serves every depth (dynamic trip count); the
-            # zero-step call donates and returns the pool unchanged.
+            # zero-step calls donate and return the pool unchanged.
             self._tok_overrides[0] = 0   # compile the override splice
-            pt = (self.pool.page_table_array(),) if self.paged else ()
+            zeros = jnp.zeros(self.pool.n_slots, jnp.int32)
             new_caches, out_buf, toks = self._fused_step()(
-                self.params, self.pool.caches, *pt, self._decode_toks(),
-                self.pool.positions_array(),
-                jnp.zeros(self.pool.n_slots, jnp.int32))
+                self.params, self.pool.caches,
+                *((self.pool.page_table_array(),) if self.paged else ()),
+                self._decode_toks(), self.pool.positions_array(), zeros)
             self.pool.mark_donated("fused decode warmup")
             jax.block_until_ready(out_buf)
             self.pool.adopt(new_caches)
             self._dev_toks = toks
+            self._warm_steps.add("fused")
+            # Speculative variants: compile every width the adaptive
+            # re-decision can land on (plus the plain fused step above,
+            # which backoff-to-1 falls back to) — a mid-run width
+            # switch must swap executables, never compile one.  Each
+            # zero-step call's while cond is False, so nothing runs;
+            # the history-override splice compiles along the way.
+            if self._spec:
+                cap = min(self.max_spec_depth, self.max_dispatch_depth)
+                if self.speculate == "auto":
+                    widths = [c for c in SPEC_DEPTH_CANDIDATES
+                              if 2 <= c <= cap]
+                else:
+                    widths = [self._spec_depth] \
+                        if self._spec_depth >= 2 else []
+                for d in widths:
+                    self._hist_overrides[0] = [0]
+                    new_caches, hist, out_buf, toks, _stats = \
+                        self._spec_step(d)(
+                            self.params, self.pool.caches,
+                            *((self.pool.page_table_array(),)
+                              if self.paged else ()),
+                            self._decode_hist(), self._decode_toks(),
+                            self.pool.positions_array(), zeros)
+                    self.pool.mark_donated("fused decode warmup")
+                    jax.block_until_ready(out_buf)
+                    self.pool.adopt(new_caches)
+                    self._dev_toks = toks
+                    self._dev_hist = hist
+                    self._warm_steps.add(("spec", d))
             self._warm_fused = True
         else:
             self._decode_step()(
@@ -619,7 +728,8 @@ class ServeScheduler:
             queued = n_dec
             cores, chunk = 0, 0
             prefill_ops, pf_finished = [], []
-        decoded, dec_finished, depth = self._dispatch_decode()
+        decoded, dec_finished, depth, disp_toks, spec_d = \
+            self._dispatch_decode()
         finished = pf_finished + dec_finished
         self._active = [r for r in self._active
                         if r.state is not RequestState.DONE]
@@ -634,7 +744,8 @@ class ServeScheduler:
             finished=tuple(finished), queued_tokens=queued,
             n_cores=cores, chunk=chunk, depth=depth,
             deadline_misses=self._tick_misses,
-            queue_depth=self._queue_depth)
+            queue_depth=self._queue_depth,
+            dispatched_tokens=disp_toks, spec_depth=spec_d)
         self.trace.append(rec)
         self._tick += 1
         return rec
@@ -944,6 +1055,13 @@ class ServeScheduler:
                     # The host knows this slot's next input token; the
                     # device carry learns it at the next dispatch.
                     self._tok_overrides[req.slot] = tok
+                    if self._spec:
+                        # Seed the slot's history ring with the prompt
+                        # tail + first token: the n-gram proposer drafts
+                        # from it at the very first speculative dispatch.
+                        seed = list(req.host_tokens or ()) + [tok]
+                        self._hist_overrides[req.slot] = \
+                            seed[-self.spec_history:]
         return prefill_ops, finished
 
     # -- decode (per-tick path) ---------------------------------------------
@@ -1026,6 +1144,130 @@ class ServeScheduler:
                     cache_shardings=self.pool.shardings)
         return self._fused_jit
 
+    def _spec_step(self, depth: int):
+        """The compiled speculative fused step for draft window
+        ``depth`` (one executable per depth — the verify width is a
+        static shape; the tiny dict caches them across the adaptive
+        re-decisions)."""
+        fn = self._spec_jit.get(depth)
+        if fn is None:
+            if self.paged:
+                fn = make_paged_spec_decode_step(
+                    self.cfg, depth=depth,
+                    page_size=self.pool.page_size, max_len=self.max_len,
+                    history=self.spec_history,
+                    kernel_tuner=self.kernel_tuner,
+                    max_depth=self.max_dispatch_depth,
+                    cache_shardings=self.pool.shardings)
+            else:
+                fn = make_spec_decode_step(
+                    self.cfg, depth=depth, history=self.spec_history,
+                    window=self.window, kernel_tuner=self.kernel_tuner,
+                    max_depth=self.max_dispatch_depth,
+                    cache_shardings=self.pool.shardings)
+            self._spec_jit[depth] = fn
+        return fn
+
+    def _decode_hist(self) -> jax.Array:
+        """The device-resident per-lane token-history ring the n-gram
+        proposer drafts from, with any host-known seeds (prompt tails
+        captured at prefill completion) spliced in — same dense-where
+        splice rationale as ``_decode_toks``."""
+        n, h = self.pool.n_slots, self.spec_history
+        if self._dev_hist is None:
+            self._dev_hist = jnp.full((n, h), -1, jnp.int32)
+        if self._hist_overrides:
+            mask = [False] * n
+            vals = [[-1] * h for _ in range(n)]
+            for slot, seed in self._hist_overrides.items():
+                mask[slot] = True
+                tail = list(seed[-h:])
+                vals[slot] = [-1] * (h - len(tail)) + tail
+            self._dev_hist = jnp.where(
+                jnp.asarray(mask)[:, None],
+                jnp.asarray(vals, jnp.int32), self._dev_hist)
+            self._hist_overrides.clear()
+        return self._dev_hist
+
+    def _decide_spec_depth(self) -> int:
+        """Speculation width for the next dispatches — the
+        ``serve_spec_depth`` decision.  Fixed widths are traced as such;
+        ``auto`` asks the engine to trade expected accepted tokens per
+        verify (geometric in the acceptance rate) against the wider
+        verify's cost, seeded from the analytic prior acceptance before
+        any drain has observed real accept/reject behaviour and refined
+        online afterwards (``serve_spec_accept`` EMAs the acceptance
+        rate itself, recovered at each drained dispatch's own width —
+        see ``_drain``).  Widening is hysteretic (one candidate rung per
+        decision); collapsed acceptance forces depth 1 — speculation
+        backs off to plain fused decode."""
+        cap = min(self.max_spec_depth, self.max_dispatch_depth)
+        model = self.decision_model()
+        if self.speculate != "auto":
+            d = max(min(int(self.speculate), cap), 1)
+            if model is not None:
+                model.note(self.spec_depth_key, policy="fixed-spec-depth",
+                           cores=1, chunk=d, inputs=(("fixed", True),))
+            return d
+        if model is None:     # static params object: no store to consult
+            return min(2, cap)
+        evidence = (self.spec_accept_key, self.spec_step_key,
+                    self.fused_key)
+        inputs: tuple = ()
+        ema = model.smoothed_t_iter(self.spec_accept_key)
+        if ema is None:
+            accept = DEFAULT_SPEC_ACCEPT
+            inputs += (("seeded", True),)
+        else:
+            # The EMA already holds the acceptance rate (recovered at
+            # each dispatch's own width in ``_drain``) — no inversion.
+            accept = min(max(float(ema), 0.0), 0.999)
+            inputs += (("accept_ema", round(float(ema), 4)),)
+        step = model.smoothed_t_iter(self.spec_step_key) \
+            or model.smoothed_t_iter(self.fused_key) or 0.0
+        cands = tuple(c for c in SPEC_DEPTH_CANDIDATES if c <= cap) \
+            or (1,)
+        # Width cost measured, not assumed: the EMA'd speculative round
+        # seconds over the EMA'd width-1 iteration seconds prices the
+        # wider verify on *this* host and config (on CPU a width-2 GEMM
+        # can even beat the width-1 GEMV — the static prior cannot know
+        # that).  Falls back to the analytic prior until both step EMAs
+        # hold samples.
+        kwargs: dict = {}
+        spec_s = model.smoothed_t_iter(self.spec_step_key)
+        iter_s = model.smoothed_t_iter(self.fused_iter_key)
+        if spec_s and iter_s:
+            d_ref = max(self._spec_depth, 2)
+            wc = (spec_s / iter_s - 1.0) / (d_ref - 1.0)
+            kwargs["width_cost"] = min(max(wc, 0.0), 1.0)
+            inputs += (("width_cost_online", True),)
+        decision = model.spec_depth(
+            self.spec_depth_key, candidates=cands, accept_rate=accept,
+            step_s=step, max_depth=cap, current=self._spec_depth,
+            evidence=evidence, inputs=inputs, **kwargs)
+        return decision.chunk
+
+    def spec_stats(self) -> dict:
+        """Cumulative speculation telemetry (benchmarks and the serve
+        CLI surface it): verify events, tokens they emitted, loop
+        rounds, the tokens-per-verify ratio, the EMA'd acceptance rate
+        (per-dispatch-width samples; inverted from tpv only when no
+        decision store is attached), and the width itself."""
+        tpv = self.spec_emitted / self.spec_verifies \
+            if self.spec_verifies else 0.0
+        d = self._spec_depth if self._spec else 0
+        model = self.decision_model()
+        ema = model.smoothed_t_iter(self.spec_accept_key) \
+            if model is not None else None
+        accept = float(ema) if ema is not None \
+            else ((tpv - 1.0) / (d - 1.0) if d >= 2 and tpv else 0.0)
+        return {"enabled": self._spec, "depth": d,
+                "verifies": self.spec_verifies,
+                "emitted": self.spec_emitted,
+                "rounds": self.spec_rounds,
+                "tokens_per_verify": tpv,
+                "acceptance_rate": max(accept, 0.0)}
+
     def decode_cost_analysis(self) -> dict | None:
         """Per-device XLA costs of one decode loop iteration: flops,
         HBM bytes accessed, and collective wire bytes (analysis/roofline
@@ -1040,7 +1282,16 @@ class ServeScheduler:
         toks = jnp.zeros(n, jnp.int32)
         poss = self.pool.positions_array()
         try:
-            if self._fused and self.paged:
+            if self._fused and self._spec and self._spec_depth >= 2:
+                # Speculative hot path: cost the spec step's loop body
+                # (one verify round — ``decode_loop_iters`` counts
+                # exactly those rounds on this path).
+                pt = (self.pool.page_table_array(),) if self.paged else ()
+                hist = jnp.full((n, self.spec_history), -1, jnp.int32)
+                lowered = self._spec_step(self._spec_depth).lower(
+                    self.params, self.pool.caches, *pt, hist, toks,
+                    poss, jnp.zeros(n, jnp.int32))
+            elif self._fused and self.paged:
                 lowered = self._fused_step().lower(
                     self.params, self.pool.caches,
                     self.pool.page_table_array(), toks, poss,
@@ -1204,26 +1455,48 @@ class ServeScheduler:
         immediately — the tokens themselves land later via ``_drain``."""
         decs = [r for r in self._active if r.state is RequestState.DECODE]
         if not decs:
-            return [], [], 0
+            return [], [], 0, 0, 0
         depth = self._decide_depth(decs)
         self._last_depth = depth
+        spec_d = self._spec_depth if self._spec else 1
+        if self._spec and self.speculate == "auto" and spec_d < 2 \
+                and min(self.max_spec_depth, self.max_dispatch_depth) >= 2 \
+                and self.decode_dispatches % SPEC_PROBE_EVERY == 0:
+            # Exploration probe (see SPEC_PROBE_EVERY): depth 1 must not
+            # be absorbing, so one window per probe period runs at width
+            # 2 to keep the acceptance EMA live.
+            spec_d = 2
+        use_spec = spec_d >= 2
+        # Under speculation every verify window is ``spec_d`` wide
+        # regardless of the lane's remaining budget, so the last
+        # ``spec_d - 1`` cache positions are reserved: a window must
+        # never clamp its KV write over live earlier entries.  The
+        # usable cache length is effectively max_len - (spec_d - 1).
+        margin = spec_d - 1 if use_spec else 0
         steps = [0] * self.pool.n_slots
         lanes = []
         for r in decs:
             budget = min(r.max_new_tokens - len(r.out) - r.pending_out,
-                         self.max_len - self.pool.positions[r.slot])
-            take = min(depth, budget)
+                         self.max_len - margin
+                         - self.pool.positions[r.slot])
+            take = max(min(depth, budget), 0)
             steps[r.slot] = take
             lanes.append((r, r.slot, take))
         if self.paged:
             # CoW/allocation must land before the dispatch reads the
             # pool, and the table upload after — the loop body's gather
             # indirection is exactly this tick's host-resolved mapping.
+            # Speculation widens the writable span by the draft margin:
+            # rejected drafts scatter into positions past the accepted
+            # frontier, and those writes must only ever land in pages
+            # this slot owns exclusively (kv_cache.rollback enforces
+            # the refcount invariant).
             t_pg = time.perf_counter()
             for _, slot, take in lanes:
                 if take:
                     pos = self.pool.positions[slot]
-                    self.pool.ensure_writable(slot, pos, pos + take)
+                    self.pool.ensure_writable(
+                        slot, pos, min(pos + take + margin, self.max_len))
             model = self.decision_model()
             if model is not None:
                 model.observe(self.page_mgmt_key, len(lanes),
@@ -1231,17 +1504,26 @@ class ServeScheduler:
         toks_a = self._decode_toks()
         poss_a = self.pool.positions_array()
         steps_a = jnp.asarray(steps, jnp.int32)
-        fused = self._fused_step()
+        step_id = ("spec", spec_d) if use_spec else "fused"
+        fused = self._spec_step(spec_d) if use_spec else self._fused_step()
         # Periodic synced dispatch: the only way to wall-clock the
         # device step honestly is with an empty pipeline around it.
-        timed = self._warm_fused and \
+        timed = step_id in self._warm_steps and \
             self.decode_dispatches % self.sync_every == 0
         if timed:
             self._drain(drop_to=0)
         t_dev = time.perf_counter()
         pt = (self.pool.page_table_array(),) if self.paged else ()
-        new_caches, out_buf, final_toks = fused(
-            self.params, self.pool.caches, *pt, toks_a, poss_a, steps_a)
+        stats = None
+        if use_spec:
+            new_caches, new_hist, out_buf, final_toks, stats = fused(
+                self.params, self.pool.caches, *pt, self._decode_hist(),
+                toks_a, poss_a, steps_a)
+        else:
+            new_hist = None
+            new_caches, out_buf, final_toks = fused(
+                self.params, self.pool.caches, *pt, toks_a, poss_a,
+                steps_a)
         self.pool.mark_donated("fused decode dispatch")
         total = sum(take for _, _, take in lanes)
         if timed:
@@ -1254,6 +1536,23 @@ class ServeScheduler:
             model = self.decision_model()
             if model is not None and total > 0:
                 model.observe(self.fused_key, total, dt)
+                if stats is not None:
+                    # Pipeline is empty and the buffer ready: reading
+                    # the loop-round count here is the same sanctioned
+                    # sync, and it prices one speculative verify round
+                    # for the depth decision.
+                    rounds = int(jax.device_get(  # repro-lint: disable=RL002
+                        stats)[0])
+                    if rounds > 0:
+                        model.observe(self.spec_step_key, rounds, dt)
+                else:
+                    # Width-1 per-iteration cost, uncontaminated by
+                    # speculation — the denominator of the online
+                    # width_cost (see _decide_spec_depth).
+                    iters = max((take for _, _, take in lanes),
+                                default=0)
+                    if iters > 0:
+                        model.observe(self.fused_iter_key, iters, dt)
             if self.paged and self._page_size_auto:
                 # Re-decide with whatever page-management and prefill
                 # costs the run has observed by now: the trace shows the
@@ -1261,14 +1560,26 @@ class ServeScheduler:
                 # refined size drives the next pool over this store
                 # (geometry is compiled in — it cannot change mid-run).
                 self._decide_page_size()
+            if self._spec and self.speculate == "auto":
+                # Re-decide the speculation width with the acceptance
+                # rate the drains have observed — analytic → online in
+                # the trace, with backoff to 1 when acceptance collapses.
+                self._spec_depth = self._decide_spec_depth()
         self._warm_fused = True
+        self._warm_steps.add(step_id)
         self.pool.adopt(new_caches)
         self._dev_toks = final_toks
+        if new_hist is not None:
+            self._dev_hist = new_hist
         self.decode_dispatches += 1
         self.decode_tokens += total
-        self.decode_loop_iters += max((take for _, _, take in lanes),
-                                      default=0)
-        self._inflight.append((out_buf, lanes))
+        if stats is None:
+            self.decode_loop_iters += max((take for _, _, take in lanes),
+                                          default=0)
+        # else: speculative loop rounds are variable — counted at drain
+        # time from the dispatch's stats vector.
+        self._inflight.append(
+            (out_buf, stats, spec_d if use_spec else 0, lanes))
 
         decoded, finished = [], []
         for r, slot, take in lanes:
@@ -1276,10 +1587,10 @@ class ServeScheduler:
             r.pending_out += take
             decoded.append(r.rid)
             if len(r.out) + r.pending_out >= r.max_new_tokens \
-                    or self.pool.positions[slot] >= self.max_len:
+                    or self.pool.positions[slot] >= self.max_len - margin:
                 self._finish(r)
                 finished.append(r.rid)
-        return decoded, finished, depth
+        return decoded, finished, depth, total, spec_d if use_spec else 0
 
     def _drain(self, drop_to: int | None = None,
                harvest: bool = False) -> None:
@@ -1298,13 +1609,43 @@ class ServeScheduler:
                 probe = getattr(self._inflight[0][0], "is_ready", None)
                 if probe is not None and not probe():
                     break
-            out_buf, lanes = self._inflight.popleft()
+            out_buf, stats, disp_spec_d, lanes = self._inflight.popleft()
             t_dev = time.perf_counter()
             # The fused path's one sanctioned round-trip (docstring above).
-            toks = jax.device_get(out_buf)  # repro-lint: disable=RL002
+            if stats is not None:
+                toks, st = jax.device_get(  # repro-lint: disable=RL002
+                    (out_buf, stats))
+            else:
+                toks = jax.device_get(out_buf)  # repro-lint: disable=RL002
+                st = None
             if must:
                 self._blocked_s += time.perf_counter() - t_dev
             self.host_roundtrips += 1
+            if st is not None:
+                # Speculation telemetry: loop rounds actually run,
+                # per-lane verify events, and tokens they emitted.  The
+                # acceptance rate is recovered *here*, at the width this
+                # dispatch actually ran (``disp_spec_d``), not later at
+                # whatever width the scheduler has since moved to —
+                # tokens-per-verify saturates at the dispatch width, so
+                # inverting it at any other width mis-reads acceptance.
+                # Stored as elems=verifies, seconds=accept × verifies so
+                # the EMA's per-element ratio *is* the acceptance rate.
+                rounds, verifies, emitted = (int(x) for x in st)
+                self.decode_loop_iters += rounds
+                self.spec_rounds += rounds
+                self.spec_verifies += verifies
+                self.spec_emitted += emitted
+                model = self.decision_model()
+                if model is not None and verifies > 0 \
+                        and disp_spec_d >= 2:
+                    a_s = (emitted / verifies - 1.0) / (disp_spec_d - 1.0)
+                    # Floor keeps the sample visible to the EMA (the
+                    # refiner drops zero-cost observations) while
+                    # staying far below the backoff threshold.
+                    a_s = min(max(a_s, 1e-3), 0.999)
+                    model.observe(self.spec_accept_key, verifies,
+                                  a_s * verifies)
             for req, slot, take in lanes:
                 req.pending_out -= take
                 if req.state is RequestState.CANCELLED:

@@ -424,9 +424,12 @@ def test_shipped_tree_is_clean():
 
 def test_shipped_tree_suppressions_are_sparse():
     """The sanctioned-sync suppressions stay a short, deliberate list —
-    if this grows past a handful, the gate is being papered over."""
+    if this grows past a handful, the gate is being papered over.
+    (PR 10 added the speculative drain's stats read and the timed
+    dispatch's loop-round read — both inside the already-sanctioned
+    periodic sync.)"""
     _, suppressed = lint_paths([REPO / "src"])
-    assert suppressed <= 8
+    assert suppressed <= 10
 
 
 def test_default_config_encodes_serve_roots():

@@ -1,0 +1,372 @@
+"""Self-speculative fused decoding: byte-identity against the
+non-speculative fused path at every depth (contiguous, paged, auto,
+and — via ``test_multidevice``-style subprocesses — the 4x2 mesh), KV
+rollback invariants under random accept/reject interleavings, the
+attention-only architecture guard, and the ``serve_spec_depth``
+decision kind (analytic prior → online acceptance EMA, collapse
+backoff, one-rung hysteresis).
+
+Plain tests run everywhere; the hypothesis sweep over rollback
+interleavings skips when the library is missing — same convention as
+tests/test_serve_paged.py."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SequentialExecutor, adaptive
+from repro.core.acc import AdaptiveCoreChunk
+from repro.core.calibration import CalibrationCache
+from repro.core.model import ANALYTIC, ONLINE, ExecutionModel
+from repro.models import init_params
+from repro.serve import ServeScheduler
+from repro.serve.decode_loop import make_spec_decode_step
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def make_sched(cfg, params, *, speculate=None, paged=False, depth=4,
+               n_slots=3, max_len=64, **kw):
+    if paged:
+        kw.setdefault("page_size", 8)
+    return ServeScheduler(
+        cfg, params, n_slots=n_slots, max_len=max_len,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=depth, paged=paged, speculate=speculate, **kw)
+
+
+def _mixed_prompts(cfg, seed=0):
+    """Prompts spanning the acceptance spectrum: a repeated motif (the
+    prompt-lookup drafter's best case), pure noise (its worst), and a
+    short motif tail — so every identity run exercises full accepts,
+    full rejects, and partial-prefix accepts in one pool."""
+    rng = np.random.RandomState(seed)
+    motif = [7, 3, 11, 5]
+    return [(motif * 5)[:14],
+            [int(t) for t in rng.randint(0, cfg.vocab_size, 9)],
+            (motif * 3)[:6]]
+
+
+def run_spec(sched, prompts, budgets):
+    sched.warmup()
+    rids = [sched.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, budgets, strict=True)]
+    outs = sched.run_until_idle()
+    return [outs[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# byte identity: speculative vs non-speculative fused decode
+# ---------------------------------------------------------------------------
+
+# Ragged budgets force mid-loop completion: lanes exhaust their budget
+# at different rounds, and a verify that overshoots a lane's remaining
+# budget must clamp its emit rather than leak extra tokens.
+BUDGETS = (9, 3, 7)
+
+
+@pytest.mark.parametrize("d", [2, 4, 8])
+def test_spec_tokens_identical_to_nonspec(setup, d):
+    cfg, params = setup
+    prompts = _mixed_prompts(cfg)
+    ref = run_spec(make_sched(cfg, params, speculate=None),
+                   prompts, BUDGETS)
+    sched = make_sched(cfg, params, speculate=d)
+    got = run_spec(sched, prompts, BUDGETS)
+    assert got == ref, f"depth {d} moved a token"
+    assert sched.pool.allocations == 1, "donation invariant broke"
+    stats = sched.spec_stats()
+    assert stats["enabled"] and stats["depth"] == d
+    assert stats["verifies"] > 0
+    # Prefill emits each request's first token; every later token rides
+    # a speculative verify round.
+    assert stats["emitted"] == sum(BUDGETS) - len(BUDGETS)
+
+
+def test_spec_auto_tokens_identical(setup):
+    """`speculate='auto'` may change the *width* mid-run (that is its
+    job) but never the tokens."""
+    cfg, params = setup
+    prompts = _mixed_prompts(cfg)
+    ref = run_spec(make_sched(cfg, params, speculate=None),
+                   prompts, BUDGETS)
+    sched = make_sched(cfg, params, speculate="auto")
+    got = run_spec(sched, prompts, BUDGETS)
+    assert got == ref
+    assert sched.decision_model().trace.entries("serve_spec_depth")
+
+
+def test_paged_spec_tokens_identical(setup):
+    """Speculation over the paged pool: page-table indirection plus the
+    draft/verify/rollback loop vs the contiguous non-speculative
+    reference, including prefix reuse — a shared prefix page must be
+    CoW'd out before the speculative window can scribble on it."""
+    cfg, params = setup
+    prompts = _mixed_prompts(cfg)
+    ref = run_spec(make_sched(cfg, params, speculate=None),
+                   prompts, BUDGETS)
+    sched = make_sched(cfg, params, speculate=4, paged=True)
+    got = run_spec(sched, prompts, BUDGETS)
+    assert got == ref
+    assert sched.pool.allocations == 1
+
+    # Resubmit the motif prompt: the second pass maps the registered
+    # prefix pages read-only, then speculative decode writes past (and
+    # eventually into) them — tokens must not move and the shared page
+    # must survive with its refcount intact.
+    sched.clear_finished()
+    rid = sched.submit(prompts[0], max_new_tokens=BUDGETS[0])
+    outs = sched.run_until_idle()
+    assert outs[rid] == ref[0]
+    assert sched.pool.prefix_stats()["prefix_hits"] >= 1
+    pool = sched.pool
+    for slot in range(pool.n_slots):
+        for pid in pool.page_tables[slot]:
+            assert pool.page_refs[pid] >= 1
+
+
+MESH_SPEC_SERVE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from repro.configs import get_config
+from repro.core.acc import AdaptiveCoreChunk
+from repro.core.adaptive import adaptive
+from repro.core.executor import SequentialExecutor
+from repro.launch.mesh import make_serve_mesh
+from repro.models import lm
+from repro.serve import ServeScheduler
+
+# Speculative decode on the 4x2 serving mesh must produce byte-identical
+# tokens to the single-device non-speculative fused path: the wider
+# verify, history-ring shift and masked rollback are replica-local and
+# may not move a single argmax.
+cfg = get_config("qwen3-0.6b").reduced()
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.RandomState(0)
+motif = [7, 3, 11, 5]
+prompts = [(motif * 5)[:14],
+           [int(t) for t in rng.randint(0, cfg.vocab_size, 9)],
+           (motif * 3)[:6]]
+budgets = (9, 3, 7)
+
+def run(speculate, mesh=None, n_slots=3):
+    sched = ServeScheduler(
+        cfg, params, n_slots=n_slots, max_len=64,
+        executor=adaptive(SequentialExecutor(), AdaptiveCoreChunk()),
+        dispatch_depth=4, mesh=mesh, speculate=speculate)
+    sched.warmup()
+    rids = [sched.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, budgets, strict=True)]
+    outs = sched.run_until_idle()
+    assert sched.pool.allocations == 1, "donation invariant broke"
+    return [outs[r] for r in rids], sched
+
+ref, _ = run(None)
+mesh = make_serve_mesh(4, 2)
+for d in (2, 4):
+    got, sched = run(d, mesh=mesh, n_slots=4)
+    assert got == ref, (d, got, ref)
+    assert sched.spec_stats()["verifies"] > 0
+got, sched = run("auto", mesh=mesh, n_slots=4)
+assert got == ref, ("auto", got, ref)
+assert sched.decision_model().trace.entries("serve_spec_depth")
+print("MESH_SPEC_SERVE_OK")
+"""
+
+
+def test_mesh_spec_serve(subproc):
+    r = subproc(MESH_SPEC_SERVE, n_devices=8)
+    assert r.returncode == 0, \
+        f"mesh spec serve failed:\n{r.stdout}\n{r.stderr[-3000:]}"
+    assert "MESH_SPEC_SERVE_OK" in r.stdout
+
+
+def test_spec_requires_attention_only(setup):
+    cfg, _ = setup
+    with pytest.raises(ValueError, match="full attention"):
+        make_spec_decode_step(cfg, depth=2, window=8)
+    rec = get_config("xlstm-350m")
+    with pytest.raises(ValueError, match="attention-only"):
+        make_spec_decode_step(rec, depth=2)
+
+
+# ---------------------------------------------------------------------------
+# KV rollback invariants under random accept/reject interleavings
+# ---------------------------------------------------------------------------
+
+def _random_prompts(cfg, seed):
+    """Random mixtures of motif repeats and noise per lane: the bigram
+    drafter then produces arbitrary interleavings of full accepts,
+    partial accepts and rejects across lanes and rounds."""
+    rng = np.random.RandomState(seed)
+    prompts = []
+    for _ in range(3):
+        toks = []
+        motif = [int(t) for t in rng.randint(0, cfg.vocab_size,
+                                             rng.randint(2, 5))]
+        while len(toks) < 6 + rng.randint(0, 10):
+            if rng.rand() < 0.6:
+                toks.extend(motif)
+            else:
+                toks.extend(int(t) for t in
+                            rng.randint(0, cfg.vocab_size, 2))
+        prompts.append(toks[:15])
+    return prompts
+
+
+def _rollback_case(cfg, params, seed, depth):
+    """Run speculative and non-speculative pools tick-aligned and stop
+    mid-decode: emitted tokens AND the live KV region ``[:pos]`` of
+    every slot must be byte-identical — i.e. a rejected draft's cache
+    write never survives anywhere the causal mask can read.  (Stale
+    entries at ``>= pos`` are exactly the rollback slack the next
+    verify window overwrites; they are not compared.)"""
+    prompts = _random_prompts(cfg, seed)
+
+    def run(spec):
+        sched = make_sched(cfg, params, speculate=spec)
+        sched.warmup()
+        for p in prompts:
+            sched.submit(p, max_new_tokens=40)
+        for _ in range(8):
+            sched.tick()
+        return sched
+
+    ref, got = run(None), run(depth)
+    assert got.pool.positions == ref.pool.positions, seed
+    for li, (rc, sc) in enumerate(zip(ref.pool.caches, got.pool.caches, strict=True)):
+        if rc is None:
+            continue
+        for key in ("k", "v"):
+            r, s = np.asarray(rc[key]), np.asarray(sc[key])
+            for slot in range(r.shape[0]):
+                p = ref.pool.positions[slot]
+                assert np.array_equal(r[slot][:, :p], s[slot][:, :p]), \
+                    (seed, li, key, slot)
+
+
+def test_kv_rollback_invariants(setup):
+    cfg, params = setup
+    for seed, depth in ((0, 4), (13, 8), (91, 2)):
+        _rollback_case(cfg, params, seed, depth)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1), depth=st.sampled_from([2, 4]))
+    @settings(max_examples=6, deadline=None)
+    def test_kv_rollback_invariants_property(setup, seed, depth):
+        cfg, params = setup
+        _rollback_case(cfg, params, seed, depth)
+
+
+# ---------------------------------------------------------------------------
+# the serve_spec_depth decision kind
+# ---------------------------------------------------------------------------
+
+def test_spec_depth_analytic_prior():
+    """At the seed acceptance (0.5) and default width cost (0.25) the
+    Overhead-Law score E(d,a)/cost(d) peaks at d=2 — speculation turns
+    on, conservatively, before any evidence exists."""
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    dec = m.spec_depth("k", candidates=(1, 2, 4, 8), accept_rate=0.5)
+    assert dec.chunk == 2
+    assert dec.provenance == ANALYTIC
+    inputs = dict(dec.inputs)
+    assert inputs["backoff"] is False
+    scores = dict(inputs["scores"])
+    assert scores[2] > scores[1] and scores[2] > scores[4]
+
+
+def test_spec_depth_collapse_backoff():
+    """Acceptance under ``min_accept`` forces depth 1 outright — no
+    hysteresis ladder on the way down, drafting noise must stop taxing
+    the steady state immediately."""
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    dec = m.spec_depth("k", candidates=(1, 2, 4, 8), accept_rate=0.01,
+                       current=8)
+    assert dec.chunk == 1
+    assert dict(dec.inputs)["backoff"] is True
+
+
+def test_spec_depth_one_rung_hysteresis():
+    """Acceptance measured at depth 2 is censored at one accepted draft:
+    a saturated reading (a≈1) must widen one candidate rung, not vault
+    to the argmax."""
+    m = ExecutionModel(CalibrationCache(), hardware="test")
+    up = m.spec_depth("k", candidates=(1, 2, 4, 8), accept_rate=0.94,
+                      current=2)
+    assert up.chunk == 4
+    assert dict(up.inputs)["unclamped"] == 8
+    down = m.spec_depth("k", candidates=(1, 2, 4, 8), accept_rate=0.3,
+                        current=8)
+    assert down.chunk == 4          # argmax is 2; one rung down from 8
+    assert dict(down.inputs)["unclamped"] == 2
+    stay = m.spec_depth("k", candidates=(1, 2, 4, 8), accept_rate=0.5,
+                        current=2)
+    assert stay.chunk == 2
+    assert "unclamped" not in dict(stay.inputs)
+
+
+def test_spec_depth_provenance_analytic_to_online(setup):
+    """Under ``speculate='auto'`` the first decision rides the analytic
+    prior; once drains feed the ``serve_spec_accept`` EMA the decisions
+    must report online provenance — and on a motif-heavy workload the
+    observed acceptance must be visibly non-zero."""
+    cfg, params = setup
+    sched = make_sched(cfg, params, speculate="auto", n_slots=2)
+    sched.warmup()
+    motif = [7, 3, 11, 5] * 4
+    ticks = []
+    for _ in range(4):
+        for _ in range(2):
+            sched.submit(motif[:12], max_new_tokens=12)
+        sched.run_until_idle()
+        ticks.extend(sched.trace)       # clear_finished drops the trace
+        sched.clear_finished()
+    entries = sched.decision_model().trace.entries("serve_spec_depth")
+    assert entries, "auto mode traced no serve_spec_depth decisions"
+    prov = [e.decision.provenance for e in entries]
+    assert prov[0] == ANALYTIC
+    assert ONLINE in prov, prov
+    stats = sched.spec_stats()
+    assert stats["acceptance_rate"] > 0.0
+    assert stats["tokens_per_verify"] >= 1.0
+    # Variable accepted-token accounting: the tick records carry the
+    # actual dispatched token totals, not lanes × depth.
+    spec_ticks = [r for r in ticks if r.spec_depth >= 2]
+    assert spec_ticks, "no tick ever dispatched speculatively"
+    assert sum(r.dispatched_tokens for r in spec_ticks) \
+        == stats["emitted"]
+
+
+def test_spec_depth_online_backoff_and_climb(setup):
+    """Drive the drain-time EMA directly: collapsed acceptance must
+    park the next decision at depth 1, and recovered acceptance must
+    climb back one rung at a time (1 → 2, never 1 → 8)."""
+    cfg, params = setup
+    sched = make_sched(cfg, params, speculate="auto", n_slots=2)
+    sched.warmup()
+    model = sched.decision_model()
+    for _ in range(30):
+        model.observe(sched.spec_accept_key, 10, 0.01 * 10)
+    assert sched._decide_spec_depth() == 1
+    sched._spec_depth = 1
+    for _ in range(200):
+        model.observe(sched.spec_accept_key, 10, 0.9 * 10)
+    assert sched._decide_spec_depth() == 2
+    sched._spec_depth = 2
+    assert sched._decide_spec_depth() == 4
